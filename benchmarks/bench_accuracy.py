@@ -1,0 +1,57 @@
+"""Paper claim: accuracy vs number of step-2 passes (q2/q3/q4), both
+datapaths, float AND bit-accurate fixed point.
+
+Reproduces the quantitative content of the paper's accuracy discussion
+(§I, §IV 'with the same factor of accuracy'): the feedback datapath's
+error is IDENTICAL to the pipelined one at every pass count, and two
+passes from a p=7 seed clear fp32 mantissa precision.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import goldschmidt as gs
+from repro.core.fixed_point import FixedPointDatapath
+from repro.core import lut
+
+
+def rows():
+    out = []
+    m = jnp.asarray(np.linspace(1.0, 2.0, 20001, dtype=np.float32)[:-1])
+    n_np = np.random.RandomState(0).uniform(1.0, 2.0 - 1e-9, 20000)
+    d_np = np.random.RandomState(1).uniform(1.0, 2.0 - 1e-9, 20000)
+    for p in (5, 7, 9):
+        seed_err = lut.seed_rel_error_bound(p)
+        dp = FixedPointDatapath(p=p, frac_bits=28)
+        for passes in (1, 2, 3):
+            t0 = time.perf_counter()
+            errs = {}
+            for variant in ("pipelined", "feedback"):
+                q = gs.gs_reciprocal_normalized(m, p=p, iters=passes,
+                                                variant=variant)
+                errs[variant] = float(jnp.max(jnp.abs(m * q - 1.0)))
+            fx_err, _ = dp.max_quotient_error(n_np, d_np, passes,
+                                              "feedback")
+            fx_err_p, _ = dp.max_quotient_error(n_np, d_np, passes,
+                                                "pipelined")
+            us = (time.perf_counter() - t0) * 1e6
+            out.append({
+                "name": f"accuracy_p{p}_pass{passes}",
+                "us_per_call": round(us, 1),
+                "derived": (
+                    f"seed={seed_err:.2e} float_pipe={errs['pipelined']:.2e} "
+                    f"float_fb={errs['feedback']:.2e} "
+                    f"fixed_fb={fx_err:.2e} fixed_pipe={fx_err_p:.2e} "
+                    f"bitident={fx_err == fx_err_p}"
+                ),
+            })
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r)

@@ -1,0 +1,38 @@
+"""Paper Fig. 4 + §V: cycle counts and area for pipelined vs feedback.
+
+The table this produces IS the paper's comparison: q2 at cycle 9 in both
+designs, feedback +1 cycle total, 3 multipliers + 2 complementers saved
+at the paper's 3-pass accuracy point, savings growing with passes.
+"""
+
+from __future__ import annotations
+
+from repro.core import hardware_model as hw
+
+
+def rows():
+    out = []
+    for passes in (2, 3, 4, 5):
+        sp = hw.schedule_division("pipelined", passes)
+        sf = hw.schedule_division("feedback", passes)
+        ap = hw.area("pipelined", passes)
+        af = hw.area("feedback", passes)
+        sv = hw.savings(passes)
+        out.append({
+            "name": f"cycles_pass{passes}",
+            "us_per_call": 0.0,
+            "derived": (
+                f"pipelined={sp.makespan}cyc feedback={sf.makespan}cyc "
+                f"delta={sf.makespan - sp.makespan} q2@{sp.q2_cycle()} "
+                f"mults {ap['multipliers']}->{af['multipliers']} "
+                f"compl {ap['complementers']}->{af['complementers']} "
+                f"saved_mults={sv['multipliers']} "
+                f"saved_compl={sv['complementers']}"
+            ),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r)

@@ -1,0 +1,57 @@
+"""Division-site microbenchmarks: Goldschmidt vs XLA-native, jit'd on the
+host (CPU here; the structural claim — multiply-add only, no divide unit —
+is dtype/ISA independent; wall numbers are host-specific).
+
+Also times the policy-level fused ops (softmax / rmsnorm denominators)
+which are the framework's real division sites.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import goldschmidt as gs
+from repro.core.policy import EXACT, GS_FEEDBACK, GS_PIPELINED
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows():
+    out = []
+    r = np.random.RandomState(0)
+    for n in (1 << 14, 1 << 18):
+        x = jnp.asarray(np.abs(r.randn(n)).astype(np.float32) + 0.1)
+        native = jax.jit(lambda v: 1.0 / v)
+        fb = jax.jit(lambda v: gs.gs_reciprocal(v, variant="feedback"))
+        pipe = jax.jit(lambda v: gs.gs_reciprocal(v, variant="pipelined"))
+        t_n, t_f, t_p = _time(native, x), _time(fb, x), _time(pipe, x)
+        out.append({"name": f"recip_n{n}", "us_per_call": round(t_f, 1),
+                    "derived": f"native={t_n:.1f}us pipelined={t_p:.1f}us "
+                               f"feedback/native={t_f / t_n:.2f}x"})
+    x = jnp.asarray(r.randn(64, 4096).astype(np.float32))
+    for name, pol in (("exact", EXACT), ("gs_feedback", GS_FEEDBACK),
+                      ("gs_pipelined", GS_PIPELINED)):
+        sm = jax.jit(lambda v, p=pol: p.softmax(v))
+        rn = jax.jit(lambda v, p=pol: p.normalize_rms(v, 1e-6))
+        out.append({"name": f"softmax_{name}",
+                    "us_per_call": round(_time(sm, x), 1), "derived": ""})
+        out.append({"name": f"rmsnorm_{name}",
+                    "us_per_call": round(_time(rn, x), 1), "derived": ""})
+    return out
+
+
+if __name__ == "__main__":
+    for r_ in rows():
+        print(r_)

@@ -1,0 +1,82 @@
+"""Pallas kernel validation sweep + (interpret-mode) timing.
+
+On this CPU container interpret-mode timing is NOT TPU-representative;
+the benchmark's real output is the max-abs-error column versus the jnp
+oracle across a shape sweep — the correctness half of the kernel claim.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def rows():
+    out = []
+    r = np.random.RandomState(0)
+
+    for shape in ((64, 128), (33, 517)):
+        x = np.abs(r.randn(*shape)).astype(np.float32) + 0.1
+        t0 = time.perf_counter()
+        got = np.asarray(ops.gs_recip(jnp.asarray(x)))
+        us = (time.perf_counter() - t0) * 1e6
+        err = np.abs(got * x - 1.0).max()
+        out.append({"name": f"k_recip_{shape[0]}x{shape[1]}",
+                    "us_per_call": round(us, 1),
+                    "derived": f"max_rel_err={err:.2e}"})
+
+    x = r.randn(16, 384).astype(np.float32) * 4
+    t0 = time.perf_counter()
+    got = np.asarray(ops.gs_softmax(jnp.asarray(x)))
+    us = (time.perf_counter() - t0) * 1e6
+    err = np.abs(got - np.asarray(ref.softmax_exact(jnp.asarray(x)))).max()
+    out.append({"name": "k_softmax_16x384", "us_per_call": round(us, 1),
+                "derived": f"max_abs_err={err:.2e}"})
+
+    x = r.randn(32, 512).astype(np.float32)
+    g = r.randn(512).astype(np.float32)
+    t0 = time.perf_counter()
+    got = np.asarray(ops.gs_rmsnorm(jnp.asarray(x), jnp.asarray(g)))
+    us = (time.perf_counter() - t0) * 1e6
+    err = np.abs(got - np.asarray(
+        ref.rmsnorm_exact(jnp.asarray(x), jnp.asarray(g)))).max()
+    out.append({"name": "k_rmsnorm_32x512", "us_per_call": round(us, 1),
+                "derived": f"max_abs_err={err:.2e}"})
+
+    q = r.randn(1, 4, 256, 64).astype(np.float32)
+    k = r.randn(1, 2, 256, 64).astype(np.float32)
+    v = r.randn(1, 2, 256, 64).astype(np.float32)
+    t0 = time.perf_counter()
+    got = np.asarray(ops.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                                         jnp.asarray(v), causal=True))
+    us = (time.perf_counter() - t0) * 1e6
+    err = np.abs(got - np.asarray(ref.attention_exact(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True))).max()
+    out.append({"name": "k_flash_gqa_256", "us_per_call": round(us, 1),
+                "derived": f"max_abs_err={err:.2e}"})
+
+    p0 = r.randn(1000).astype(np.float32)
+    gr = r.randn(1000).astype(np.float32)
+    m = np.zeros(1000, np.float32)
+    vv = np.zeros(1000, np.float32)
+    t0 = time.perf_counter()
+    got = ops.gs_adam_update(jnp.asarray(p0), jnp.asarray(gr), jnp.asarray(m),
+                             jnp.asarray(vv), jnp.asarray(1), lr=1e-3)
+    us = (time.perf_counter() - t0) * 1e6
+    want = ref.adam_update_exact(jnp.asarray(p0), jnp.asarray(gr),
+                                 jnp.asarray(m), jnp.asarray(vv), lr=1e-3,
+                                 step=1)
+    err = max(np.abs(np.asarray(a) - np.asarray(b)).max()
+              for a, b in zip(got, want))
+    out.append({"name": "k_adam_1000", "us_per_call": round(us, 1),
+                "derived": f"max_abs_err={err:.2e}"})
+    return out
+
+
+if __name__ == "__main__":
+    for r_ in rows():
+        print(r_)

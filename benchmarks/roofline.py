@@ -1,0 +1,96 @@
+"""Roofline table assembly from the dry-run JSON cache.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun)
+and emits the per-(arch x shape x mesh) roofline table for EXPERIMENTS.md:
+three terms in seconds, dominant bound, MODEL_FLOPS ratio, peak bytes.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: Optional[str] = None, tag: str = "") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if (d.get("tag") or "") != tag:
+            continue
+        cells.append(d)
+    cells.sort(key=lambda d: (d["arch"], SHAPE_ORDER.index(d["shape"])
+                              if d["shape"] in SHAPE_ORDER else 9,
+                              d.get("mesh", "")))
+    return cells
+
+
+def fmt_table(cells: List[Dict], *, include_mesh: bool = False) -> str:
+    hdr = ["arch", "shape"] + (["mesh"] if include_mesh else []) + [
+        "compute_s", "mem_s(xla)", "mem_s(struct)", "coll_s", "bound",
+        "peak_GiB/dev", "useful_ratio", "roofline_frac",
+    ]
+    lines = ["| " + " | ".join(hdr) + " |",
+             "|" + "|".join("---" for _ in hdr) + "|"]
+    for d in cells:
+        if d.get("status") == "skipped":
+            row = [d["arch"], d["shape"]] + (
+                [d["mesh"]] if include_mesh else []) + [
+                "—", "—", "—", "—", "skip", "—", "—", "—"]
+        elif d.get("status") != "ok":
+            row = [d["arch"], d["shape"]] + (
+                [d["mesh"]] if include_mesh else []) + [
+                "—", "—", "—", "—", "FAIL", "—", "—", "—"]
+        else:
+            r = d["roofline"]
+            mem_xla = r.get("memory_s_xla", r["memory_s"])
+            step = r["step_s_lower_bound"]
+            frac = (r["compute_s"] / step) if step else 0.0
+            row = [d["arch"], d["shape"]] + (
+                [d["mesh"]] if include_mesh else []) + [
+                f"{r['compute_s']:.3f}", f"{mem_xla:.3f}",
+                f"{r['memory_s']:.3f}", f"{r['collective_s']:.3f}",
+                r["bound"],
+                f"{d['memory']['peak_bytes_est'] / 2**30:.1f}",
+                f"{d.get('useful_flops_ratio') or 0:.3f}",
+                f"{frac:.3f}",
+            ]
+        lines.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(lines)
+
+
+def rows():
+    """benchmarks.run entries: one summary row per single-pod cell."""
+    out = []
+    for d in load_cells(mesh="single"):
+        if d.get("status") != "ok":
+            out.append({"name": f"roofline_{d['arch']}_{d['shape']}",
+                        "us_per_call": 0.0,
+                        "derived": d.get("status", "?")})
+            continue
+        r = d["roofline"]
+        step = r["step_s_lower_bound"]
+        out.append({
+            "name": f"roofline_{d['arch']}_{d['shape']}",
+            "us_per_call": round(step * 1e6, 1),
+            "derived": (
+                f"bound={r['bound']} compute={r['compute_s']:.3f}s "
+                f"mem_xla={r.get('memory_s_xla', 0):.3f}s "
+                f"coll={r['collective_s']:.3f}s "
+                f"roofline_frac={r['compute_s'] / step if step else 0:.3f} "
+                f"useful={d.get('useful_flops_ratio') or 0:.3f}"
+            ),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    print(fmt_table(load_cells(mesh="single")))

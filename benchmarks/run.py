@@ -1,0 +1,44 @@
+"""Benchmark entry point: one section per paper table/claim + the
+framework roofline summary.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # all sections
+  PYTHONPATH=src python -m benchmarks.run --only cycles
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+SECTIONS = ("cycles", "accuracy", "divider", "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SECTIONS, default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for section in SECTIONS:
+        if args.only and section != args.only:
+            continue
+        if section == "cycles":
+            from benchmarks import bench_cycles as mod
+        elif section == "accuracy":
+            from benchmarks import bench_accuracy as mod
+        elif section == "divider":
+            from benchmarks import bench_divider as mod
+        elif section == "kernels":
+            from benchmarks import bench_kernels as mod
+        else:
+            from benchmarks import roofline as mod
+        try:
+            for r in mod.rows():
+                print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness running section-wise
+            print(f"{section}__ERROR,0,\"{type(e).__name__}: {e}\"")
+
+
+if __name__ == "__main__":
+    main()

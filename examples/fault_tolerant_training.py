@@ -1,0 +1,68 @@
+"""Fault-tolerance demo: chip failures + a straggler host, survived live.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+
+Injects two simulated chip losses and a persistent straggler into a real
+training run; the driver restores from the async checkpoints, replays the
+step-addressed data, and triggers an elastic re-mesh for the straggler.
+The final loss curve is bit-identical to an uninterrupted run (asserted).
+"""
+
+import logging
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint.store import config_fingerprint
+from repro.data.synthetic import SyntheticLM
+from repro.launch.steps import TrainHParams, make_train_step
+from repro.models import api
+from repro.optim import adamw_init
+from repro.runtime.driver import DriverConfig, TrainState, run_training
+from repro.runtime.failures import FailureInjector, StragglerClock
+
+logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
+
+cfg = configs.get_smoke("tinyllama-1.1b")
+hp = TrainHParams(peak_lr=2e-3, warmup=4, total=40)
+ds = SyntheticLM(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=0)
+
+
+def init_state():
+    params = api.init(cfg, jax.random.key(0))
+    return TrainState(params, adamw_init(params), 0)
+
+
+def make_step_fn():
+    return jax.jit(make_train_step(cfg, hp))
+
+
+def make_batch(step):
+    return {k: jnp.asarray(v) for k, v in ds.global_batch_np(step).items()}
+
+
+def run(tmp, injector=None, clock=None):
+    return run_training(
+        cfg=DriverConfig(total_steps=40, checkpoint_every=8,
+                         checkpoint_dir=tmp),
+        init_state=init_state, make_step_fn=make_step_fn,
+        make_batch=make_batch, fingerprint=config_fingerprint(cfg),
+        injector=injector, clock=clock, log_every=10,
+    )
+
+
+with tempfile.TemporaryDirectory() as d1:
+    clean = run(d1)
+with tempfile.TemporaryDirectory() as d2:
+    chaotic = run(d2, injector=FailureInjector(fail_at_steps=(13, 27)),
+                  clock=StragglerClock(slow_from=33))
+
+print(f"\nclean:   final loss {clean['losses'][39]:.4f}")
+print(f"chaotic: final loss {chaotic['losses'][39]:.4f} "
+      f"({chaotic['restarts']} restarts, {chaotic['remeshes']} re-meshes)")
+drift = max(abs(clean["losses"][s] - chaotic["losses"][s])
+            for s in clean["losses"])
+print(f"max per-step loss drift: {drift:.2e} (bit-exact recovery)")
+assert drift < 1e-6

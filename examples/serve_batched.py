@@ -1,0 +1,31 @@
+"""Batched serving of a MoE model: prefill + autoregressive decode with
+KV caches, Goldschmidt softmax/renorm on the hot path.
+
+    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --arch jamba-1.5-large-398b
+"""
+
+import argparse
+import subprocess
+import sys
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+           "--smoke", "--batch", str(args.batch),
+           "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    raise SystemExit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Numpy-backed distributed checkpointing: async, manifest-verified, elastic.
+
+Layout (one directory per step)::
+
+    <dir>/step_000100/
+        manifest.json     tree structure, shapes, dtypes, step, fingerprint
+        <leaf-key>.npy    one file per pytree leaf (mesh-agnostic logical array)
+
+Properties (DESIGN.md §5):
+
+* **atomic** — written to ``.tmp-step_N`` then renamed; a crash mid-write
+  never corrupts the latest checkpoint.
+* **async** — ``CheckpointManager.save`` snapshots to host RAM (device ->
+  np) synchronously, then writes files on a background thread;
+  double-buffered via ``keep`` most-recent retention.
+* **manifest-verified** — every leaf's shape/dtype/crc recorded; restore
+  refuses mismatched trees unless ``like`` agrees.
+* **elastic** — leaves are saved as *logical* (unsharded) arrays; restore
+  device_puts onto whatever shardings the (possibly different-sized) new
+  mesh provides.  A job checkpointed on 256 chips restores on 8 (tested).
+
+Multi-host note: in a real multi-controller deployment each host gathers
+only its addressable shards; this single-process implementation gathers
+fully — the manifest format is unchanged (host-sharded files would add a
+``shard`` field), which is what keeps the elastic path honest.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+# numpy can't round-trip ml_dtypes (bfloat16, fp8) through .npy without
+# pickling; store them as raw uint8 with the logical dtype in the manifest.
+_NATIVE_KINDS = set("fiub?c")
+
+
+def _to_storable(arr: np.ndarray):
+    if arr.dtype.kind in _NATIVE_KINDS:
+        return arr, str(arr.dtype), False
+    return arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,)), \
+        str(arr.dtype), True
+
+
+def _from_storable(raw: np.ndarray, logical: str, encoded: bool):
+    if not encoded:
+        return raw
+    dt = np.dtype(getattr(ml_dtypes, logical, logical))
+    return raw.reshape(raw.shape[:-1] + (-1,)).view(dt).reshape(raw.shape[:-1])
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "__".join(parts) or "leaf"
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_leaf_key(p), l) for p, l in leaves]
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    fingerprint: str = "", blocking: bool = True,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Write one checkpoint; returns its final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = os.path.join(directory, f".tmp-step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest: Dict[str, Any] = {
+        "step": int(step), "fingerprint": fingerprint, "leaves": {},
+        "extra": extra or {},
+    }
+    host_leaves = []
+    for key, leaf in _flatten(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        storable, logical, encoded = _to_storable(arr)
+        manifest["leaves"][key] = {
+            "shape": list(arr.shape), "dtype": logical, "encoded": encoded,
+            "crc32": int(zlib.crc32(storable.tobytes())),
+        }
+        host_leaves.append((key, storable))
+
+    def write():
+        for key, arr in host_leaves:
+            np.save(os.path.join(tmp, key + ".npy"), arr)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+        return final
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    t.final_path = final  # type: ignore[attr-defined]
+    return final
+
+
+def load_checkpoint(path: str, like, *, shardings=None, verify: bool = True):
+    """Restore a pytree saved by save_checkpoint.
+
+    ``like`` provides the tree structure; ``shardings`` (same structure,
+    NamedSharding leaves) reshards onto the current mesh — the elastic path.
+    """
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    keys_like = dict(_flatten(like))
+    missing = set(keys_like) - set(manifest["leaves"])
+    if missing:
+        raise ValueError(f"checkpoint at {path} missing leaves: {sorted(missing)[:5]}")
+    sh_flat = dict(_flatten(shardings)) if shardings is not None else {}
+    out = {}
+    for key, spec in keys_like.items():
+        raw = np.load(os.path.join(path, key + ".npy"))
+        meta = manifest["leaves"][key]
+        if verify and int(zlib.crc32(raw.tobytes())) != meta["crc32"]:
+            raise IOError(f"crc mismatch for {key} in {path}")
+        arr = _from_storable(raw, meta["dtype"], meta.get("encoded", False))
+        if tuple(arr.shape) != tuple(spec.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {spec.shape}")
+        sh = sh_flat.get(key)
+        out[key] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+    # rebuild the tree
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    ordered = [out[_leaf_key(p)] for p, _ in paths]
+    return jax.tree_util.tree_unflatten(treedef, ordered), manifest
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for name in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", name))]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Rolling async checkpoints with retention + restore-latest."""
+
+    def __init__(self, directory: str, *, keep: int = 2, fingerprint: str = ""):
+        self.directory = directory
+        self.keep = keep
+        self.fingerprint = fingerprint
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree, *, blocking: bool = False,
+             extra: Optional[Dict[str, Any]] = None):
+        self.wait()  # one in flight at a time (double buffering)
+        if blocking:
+            save_checkpoint(self.directory, step, tree,
+                            fingerprint=self.fingerprint, blocking=True,
+                            extra=extra)
+        else:
+            host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+            self._pending = threading.Thread(
+                target=save_checkpoint,
+                args=(self.directory, step, host),
+                kwargs=dict(fingerprint=self.fingerprint, blocking=True,
+                            extra=extra),
+                daemon=True,
+            )
+            self._pending.start()
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for name in os.listdir(self.directory)
+            if (m := re.fullmatch(r"step_(\d+)", name))
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like, *, shardings=None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        tree, manifest = load_checkpoint(path, like, shardings=shardings)
+        if self.fingerprint and manifest["fingerprint"] and \
+                manifest["fingerprint"] != self.fingerprint:
+            raise ValueError(
+                f"checkpoint fingerprint {manifest['fingerprint']} != "
+                f"job fingerprint {self.fingerprint}"
+            )
+        return tree, manifest
+
+
+def config_fingerprint(cfg) -> str:
+    return hashlib.sha1(repr(cfg).encode()).hexdigest()[:16]

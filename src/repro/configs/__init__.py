@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Every assigned architecture has its exact public config plus a reduced
+``smoke`` config of the same family (CPU-runnable, used by tests).
+"""
+
+from __future__ import annotations
+
+from repro.configs import (
+    falcon_mamba_7b,
+    granite_3_8b,
+    granite_moe_1b,
+    internlm2_1_8b,
+    jamba_1_5_large,
+    minicpm_2b,
+    qwen2_vl_72b,
+    qwen3_moe_235b,
+    tinyllama_1_1b,
+    whisper_large_v3,
+)
+from repro.configs.base import SHAPES, ArchConfig, shape_applicable  # noqa: F401
+
+_MODULES = {
+    "tinyllama-1.1b": tinyllama_1_1b,
+    "internlm2-1.8b": internlm2_1_8b,
+    "minicpm-2b": minicpm_2b,
+    "granite-3-8b": granite_3_8b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "whisper-large-v3": whisper_large_v3,
+    "jamba-1.5-large-398b": jamba_1_5_large,
+    "granite-moe-1b-a400m": granite_moe_1b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b,
+    "qwen2-vl-72b": qwen2_vl_72b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, **over) -> ArchConfig:
+    return _MODULES[arch_id].config(**over)
+
+
+def get_smoke(arch_id: str, **over) -> ArchConfig:
+    return _MODULES[arch_id].smoke(**over)

@@ -1,0 +1,29 @@
+"""falcon-mamba-7b — pure Mamba-1, attention-free [arXiv:2410.05355].
+
+64L d_model=4096, d_inner=8192 (expand=2), ssm_state=16, vocab=65024.
+No attention softmax anywhere — the Goldschmidt sites are RMSNorm rsqrt
+and the optimizer (DESIGN.md §6).  Runs long_500k (O(1)-state decode).
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="falcon-mamba-7b", family="ssm", n_layers=64, d_model=4096,
+        n_heads=1, n_kv_heads=1, d_ff=0, vocab=65024,
+        ssm_state=16, expand=2, d_conv=4, pos="none",
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="falcon-mamba-smoke", family="ssm", n_layers=2, d_model=64,
+        n_heads=1, n_kv_heads=1, d_ff=0, vocab=256,
+        ssm_state=4, expand=2, d_conv=4, pos="none", mamba_chunk=8,
+        max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

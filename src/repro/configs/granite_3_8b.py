@@ -1,0 +1,24 @@
+"""granite-3-8b — GQA [hf:ibm-granite (assigned shape set); hf].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155, head_dim=128.
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="granite-3-8b", family="dense", n_layers=40, d_model=4096,
+        n_heads=32, n_kv_heads=8, d_ff=12800, vocab=49155,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="granite-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=160, vocab=257, max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

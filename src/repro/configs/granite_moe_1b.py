@@ -1,0 +1,29 @@
+"""granite-moe-1b-a400m — 32 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+24L d_model=1024 16H (GQA kv=8) d_ff=512 (per-expert) vocab=49155,
+MoE every layer, head_dim=64.
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="granite-moe-1b-a400m", family="moe", n_layers=24, d_model=1024,
+        n_heads=16, n_kv_heads=8, d_ff=512, vocab=49155,
+        n_experts=32, top_k=8, moe_every=1,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="granite-moe-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=256,
+        n_experts=4, top_k=2, moe_every=1,
+        moe_group_size=16, moe_chunk_groups=2, max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

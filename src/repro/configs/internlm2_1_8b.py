@@ -1,0 +1,24 @@
+"""internlm2-1.8b — GQA [arXiv:2403.17297; hf].
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92544, head_dim=128.
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="internlm2-1.8b", family="dense", n_layers=24, d_model=2048,
+        n_heads=16, n_kv_heads=8, d_ff=8192, vocab=92544,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="internlm2-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=192, vocab=512, max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

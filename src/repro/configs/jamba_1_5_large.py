@@ -1,0 +1,34 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention 1:7, MoE 16e top-2
+[arXiv:2403.19887; hf].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, head_dim=128,
+ssm_state=16, d_inner=16384.  Layer pattern: attention every 8th layer
+(attn_every=8), MoE FFN every other layer (moe_every=2) -> superblock
+period 8, 9 scanned groups.  Runs long_500k (only 9 attention layers hold
+a KV cache; mamba layers decode O(1)).
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="jamba-1.5-large-398b", family="hybrid", n_layers=72,
+        d_model=8192, n_heads=64, n_kv_heads=8, d_ff=24576, vocab=65536,
+        n_experts=16, top_k=2, moe_every=2, attn_every=8,
+        ssm_state=16, expand=2, d_conv=4,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="jamba-smoke", family="hybrid", n_layers=4, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+        n_experts=4, top_k=2, moe_every=2, attn_every=2,
+        ssm_state=4, expand=2, d_conv=4, mamba_chunk=8,
+        moe_group_size=16, moe_chunk_groups=2, max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

@@ -1,0 +1,28 @@
+"""minicpm-2b — WSD schedule, llama-like arch [arXiv:2404.06395; hf].
+
+40L d_model=2304 36H (MHA kv=36) d_ff=5760 vocab=122753, head_dim=64.
+Depth-scaled residuals (scale_depth=1.4) and tied embeddings; trained with
+the WSD (warmup-stable-decay) schedule — provided by repro.optim.schedules.
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="minicpm-2b", family="dense", n_layers=40, d_model=2304,
+        n_heads=36, n_kv_heads=36, d_ff=5760, vocab=122753,
+        tie_embeddings=True, scale_depth=1.4,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="minicpm-smoke", family="dense", n_layers=2, d_model=72,
+        n_heads=6, n_kv_heads=6, d_ff=144, vocab=256,
+        tie_embeddings=True, scale_depth=1.4, max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

@@ -1,0 +1,30 @@
+"""qwen2-vl-72b — VLM backbone with M-RoPE [arXiv:2409.12191; hf].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064, head_dim=128.
+The vision patch frontend is a STUB per the assignment: LM shapes are
+token-domain and M-RoPE position ids arrive as a (3, b, s) input
+(temporal/height/width streams; equal streams for pure text).
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="qwen2-vl-72b", family="vlm", n_layers=80, d_model=8192,
+        n_heads=64, n_kv_heads=8, d_ff=29568, vocab=152064,
+        pos="mrope", mrope_sections=(16, 24, 24), frontend="vision_stub",
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="qwen2-vl-smoke", family="vlm", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=256, head_dim=32,
+        pos="mrope", mrope_sections=(4, 6, 6), frontend="vision_stub",
+        max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

@@ -1,0 +1,29 @@
+"""qwen3-moe-235b-a22b — 128 experts top-8 [hf:Qwen].
+
+94L d_model=4096 64H (GQA kv=4) d_ff=1536 (per-expert) vocab=151936,
+head_dim=128 (explicit override — q/k/v project to 64x128=8192, not
+d_model), MoE every layer.
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="qwen3-moe-235b-a22b", family="moe", n_layers=94, d_model=4096,
+        n_heads=64, n_kv_heads=4, d_ff=1536, vocab=151936, head_dim=128,
+        n_experts=128, top_k=8, moe_every=1,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="qwen3-moe-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=512, head_dim=32,
+        n_experts=8, top_k=2, moe_every=1,
+        moe_group_size=16, moe_chunk_groups=2, max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

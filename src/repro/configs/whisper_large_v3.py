@@ -1,0 +1,34 @@
+"""whisper-large-v3 — encoder-decoder audio backbone [arXiv:2212.04356].
+
+32+32L d_model=1280 20H (MHA) d_ff=5120 vocab=51866, head_dim=64,
+LayerNorm + GELU, learned decoder positions, sinusoidal encoder positions.
+Conv frontend is a STUB per the assignment: input_specs feeds precomputed
+(b, 1500, 1280) frame embeddings.  max_seq=32768 so the decode_32k cell's
+learned-position table covers the cache (noted in DESIGN.md).
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def config(**over) -> ArchConfig:
+    kw = dict(
+        name="whisper-large-v3", family="encdec", n_layers=32, d_model=1280,
+        n_heads=20, n_kv_heads=20, d_ff=5120, vocab=51866,
+        n_enc_layers=32, enc_seq=1500, frontend="audio_stub",
+        norm="layernorm", act="gelu", pos="learned", tie_embeddings=True,
+        max_seq=32768,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def smoke(**over) -> ArchConfig:
+    kw = dict(
+        name="whisper-smoke", family="encdec", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+        n_enc_layers=2, enc_seq=16, frontend="audio_stub",
+        norm="layernorm", act="gelu", pos="learned", tie_embeddings=True,
+        max_seq=64,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)

@@ -1,0 +1,23 @@
+"""Core: Goldschmidt division with hardware reduction (the paper's contribution).
+
+Submodules:
+  lut            — ROM reciprocal / rsqrt seed tables (p in, p+2 out)
+  goldschmidt    — float-domain iteration, pipelined + feedback variants
+  fixed_point    — bit-accurate uint64 datapath emulation (Figs. 1-3)
+  hardware_model — cycle/area scheduler reproducing Fig. 4 and §V claims
+  policy         — NumericsPolicy threading the technique through the stack
+"""
+
+from repro.core.goldschmidt import (  # noqa: F401
+    gs_divide,
+    gs_reciprocal,
+    gs_rsqrt,
+    gs_sqrt,
+    iters_for,
+)
+from repro.core.policy import (  # noqa: F401
+    EXACT,
+    GS_FEEDBACK,
+    GS_PIPELINED,
+    NumericsPolicy,
+)

@@ -1,0 +1,171 @@
+"""Bit-accurate fixed-point emulation of the paper's datapath (Figs. 1–3).
+
+The paper's claims are about *hardware*: an n-bit multiplier, a 2's
+complement block, a ROM, a mux+counter logic block.  Floating point cannot
+validate those claims honestly, so this module emulates the datapath at the
+bit level with numpy ``uint64`` integer arithmetic:
+
+* all registers hold unsigned fixed-point values with ``frac_bits``
+  fraction bits (value = reg · 2^-frac_bits),
+* the multiplier computes the full 2w-bit product then **truncates** back to
+  ``frac_bits`` (hardware truncation, the conservative choice; [4]'s error
+  analysis budgets for exactly this),
+* the 2's complement block computes ``2 − r`` exactly as
+  ``(2 << frac_bits) − r`` — which is what taking the two's complement of
+  the fraction register implements,
+* operands narrower than the multiplier width are zero-extended (the
+  paper's "sensing it and adding leading zeros") — implicit in the fixed
+  register width,
+* the ROM is the integer table from :mod:`repro.core.lut`.
+
+Both datapath variants are emulated; because the feedback design performs
+the *same multiplications in the same order* on the *same multiplier
+width*, its outputs are **bit-identical** to the pipelined design — that is
+the paper's "same accuracy" claim and it is asserted exactly in
+``tests/test_fixed_point.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import lut
+
+__all__ = ["FixedPointDatapath", "FixedResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedResult:
+    """Outputs of a fixed-point Goldschmidt run."""
+
+    q: np.ndarray  # quotient estimate, value = q * 2^-frac_bits
+    r: np.ndarray  # residual (→ 1.0)
+    q_float: np.ndarray  # convenience float view
+    mult_count: int  # multiplications issued (hardware activity)
+    compl_count: int  # 2's-complement operations issued
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointDatapath:
+    """An n-bit Goldschmidt divider datapath.
+
+    Args:
+      p: ROM index width (p bits in, p+2 bits out).
+      frac_bits: fraction bits of every register / the multiplier width.
+        Must leave headroom for the 2.0 integer bit: values < 4.0.
+        frac_bits ≤ 30 keeps products within uint64 exactly.
+    """
+
+    p: int = 7
+    frac_bits: int = 28
+
+    def __post_init__(self):
+        if self.frac_bits > 30:
+            raise ValueError("frac_bits > 30 overflows the uint64 product")
+
+    # -- hardware primitive blocks ------------------------------------------
+
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        """Real → fixed register (round-to-nearest at the input boundary)."""
+        return np.rint(np.asarray(x, np.float64) * 2.0**self.frac_bits).astype(
+            np.uint64
+        )
+
+    def decode(self, reg: np.ndarray) -> np.ndarray:
+        return reg.astype(np.float64) * 2.0**-self.frac_bits
+
+    def mult(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """n×n multiplier with truncation to n fraction bits."""
+        return (a.astype(np.uint64) * b.astype(np.uint64)) >> np.uint64(
+            self.frac_bits
+        )
+
+    def complement(self, r: np.ndarray) -> np.ndarray:
+        """2's complement block: K = 2 − r exactly."""
+        two = np.uint64(2) << np.uint64(self.frac_bits)
+        return two - r.astype(np.uint64)
+
+    def rom(self, d_reg: np.ndarray) -> np.ndarray:
+        """ROM read: top p fraction bits of normalized D ∈ [1,2) index the table.
+
+        Output is the (p+2)-bit table entry left-aligned into the register
+        (zero-extension of the short operand to the multiplier width).
+        """
+        table = lut.reciprocal_table_int(self.p).astype(np.uint64)
+        one = np.uint64(1) << np.uint64(self.frac_bits)
+        frac = d_reg.astype(np.uint64) - one  # fraction field of 1.xxx
+        idx = (frac >> np.uint64(self.frac_bits - self.p)).astype(np.int64)
+        k = table[np.clip(idx, 0, (1 << self.p) - 1)]
+        return k << np.uint64(self.frac_bits - (self.p + 2))
+
+    # -- full datapaths ------------------------------------------------------
+
+    def divide_pipelined(
+        self, n: np.ndarray, d: np.ndarray, passes: int
+    ) -> FixedResult:
+        """[4]'s unrolled datapath: MULT1/2 then a dedicated pair per pass.
+
+        ``n``, ``d`` are real arrays with d normalized to [1, 2) and
+        n ∈ [0, 2) (the mantissa domain, as in the paper).
+        """
+        n_reg, d_reg = self.encode(n), self.encode(d)
+        k1 = self.rom(d_reg)
+        q = self.mult(n_reg, k1)  # MULT 1
+        r = self.mult(d_reg, k1)  # MULT 2
+        mults, compls = 2, 0
+        for i in range(passes):
+            k = self.complement(r)  # dedicated complement block i
+            compls += 1
+            last = i == passes - 1
+            q = self.mult(q, k)  # MULT X_i
+            mults += 1
+            if not last:  # final pass needs only q (paper Fig. 2: q4 ends it)
+                r = self.mult(r, k)  # MULT Y_i
+                mults += 1
+        return FixedResult(q, r, self.decode(q), mults, compls)
+
+    def divide_feedback(self, n: np.ndarray, d: np.ndarray, passes: int) -> FixedResult:
+        """The paper's feedback datapath: one multiplier pair + logic block.
+
+        The mux state below *is* the logic block of §III: `fb_valid` starts
+        false (so r1 drives the complement block), flips true once the first
+        fed-back residual exists, and the counter terminates after the
+        predetermined number of passes.
+        """
+        n_reg, d_reg = self.encode(n), self.encode(d)
+        k1 = self.rom(d_reg)
+        q = self.mult(n_reg, k1)  # MULT 1
+        r1 = self.mult(d_reg, k1)  # MULT 2
+        mults, compls = 2, 0
+
+        counter = 0  # the logic-block counter, reset state
+        r_fb = np.zeros_like(r1)
+        fb_valid = False
+        while counter < passes:  # counter comparator: predetermined count
+            r_in = r_fb if fb_valid else r1  # the 2-way mux (truth table §III)
+            k = self.complement(r_in)  # the single shared complement block
+            compls += 1
+            last = counter == passes - 1
+            q = self.mult(q, k)  # shared MULT X
+            mults += 1
+            if not last:
+                r_fb = self.mult(r_in, k)  # shared MULT Y, feeds back
+                mults += 1
+                fb_valid = True
+            counter += 1
+        r_final = r_fb if fb_valid else r1
+        return FixedResult(q, r_final, self.decode(q), mults, compls)
+
+    # -- verification helper ---------------------------------------------------
+
+    def max_quotient_error(
+        self, n: np.ndarray, d: np.ndarray, passes: int, variant: str = "feedback"
+    ) -> Tuple[float, FixedResult]:
+        """Max |q − n/d| over the batch, in absolute terms."""
+        fn = self.divide_feedback if variant == "feedback" else self.divide_pipelined
+        res = fn(np.asarray(n, np.float64), np.asarray(d, np.float64), passes)
+        exact = np.asarray(n, np.float64) / np.asarray(d, np.float64)
+        return float(np.max(np.abs(res.q_float - exact))), res

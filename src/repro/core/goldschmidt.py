@@ -1,0 +1,299 @@
+"""Goldschmidt division / reciprocal / square-root in JAX.
+
+Two datapath *variants* of the same arithmetic, mirroring the paper:
+
+* ``pipelined`` — the reference design of Ercegovac et al. [4]: every
+  iteration gets its own multiplier pair, i.e. the iteration is **unrolled**
+  in the program text.  On TPU this gives the compiler independent
+  intermediate buffers to software-pipeline (the analogue of the replicated
+  MULT X/Y/X'/Y' blocks of the paper's Fig. 2) at the cost of live-range /
+  code growth.
+
+* ``feedback`` — the paper's contribution: one multiplier pair reused via a
+  feedback path through a **logic block** (mux + counter).  Here that is a
+  ``jax.lax.fori_loop`` whose loop-carried ``(q, r)`` registers are the
+  feedback wires, whose trip count is the paper's accuracy-predetermined
+  counter, and whose first-iteration seeding (``r1`` vs ``r_{2..i}``) is the
+  mux.  Same arithmetic in the same order ⇒ bit-identical results (tested),
+  with a single reused buffer.
+
+Iteration arithmetic (paper §I, following [4]):
+
+    K1 = ROM[D],  q1 = N·K1,  r1 = D·K1
+    K_{i+1} = 2 − r_i            (2's-complement block)
+    q_{i+1} = q_i · K_{i+1}      (MULT X)
+    r_{i+1} = r_i · K_{i+1}      (MULT Y)
+
+``r_i → 1`` and ``q_i → N/D`` quadratically: if ``r_i = 1 − ε`` then
+``r_{i+1} = 1 − ε²``.  A p-bit-indexed seed gives ``|ε| ≤ ~2^-(p+1)``, so
+``i`` step-2 applications give ``~2^(i+1)·(p+1)`` good bits; the paper's two
+applications (result ``q4``) reach ``4(p+1)`` bits, enough for fp32's 24-bit
+mantissa from a p=7 table with margin.
+
+Square root / rsqrt use the Goldschmidt form from [4] (§IV notes the
+hardware reduction leaves these variants intact):
+
+    y0 = ROM_rsqrt[M],  g0 = M·y0 (→ sqrt),  h0 = y0/2 (→ 1/(2·sqrt))
+    r_i = 1/2 − g_i·h_i
+    g_{i+1} = g_i + g_i·r_i,  h_{i+1} = h_i + h_i·r_i
+
+All arithmetic is multiply/add only — no hardware divide — which is the
+entire point on TPU: the VPU has fast fused multiply-add and no divider.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut
+
+__all__ = [
+    "iters_for",
+    "gs_reciprocal",
+    "gs_divide",
+    "gs_rsqrt",
+    "gs_sqrt",
+    "gs_reciprocal_normalized",
+    "gs_rsqrt_normalized",
+]
+
+DEFAULT_P = 7  # table index bits; p+2 = 9-bit seed, ~2^-8 seed error
+
+
+def iters_for(p: int, target_bits: int) -> int:
+    """Paper's accuracy counter: number of step-2 passes for target_bits.
+
+    Seed gives ~(p+1) bits; each pass doubles.  This is the predetermined
+    count loaded into the logic-block counter (§III: "can be predetermined
+    if we are sure of how many bits accuracy we need").
+    """
+    bits = p + 1
+    iters = 0
+    while bits < target_bits:
+        bits *= 2
+        iters += 1
+    return max(iters, 1)
+
+
+def _target_bits(dtype) -> int:
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(jnp.bfloat16):
+        return 8
+    if dtype == jnp.dtype(jnp.float16):
+        return 11
+    if dtype == jnp.dtype(jnp.float64):
+        return 53
+    return 24  # float32 default
+
+
+def _normalize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x = m · 2^e with m ∈ [1, 2). Works on |x|; caller handles sign/specials."""
+    m, e = jnp.frexp(x)  # m ∈ [0.5, 1)
+    return m * 2.0, e - 1
+
+
+# ---------------------------------------------------------------------------
+# Normalized-domain kernels (m ∈ [1,2) resp. [1,4)); the building blocks the
+# Pallas kernels and the layers call.  `variant` selects the datapath.
+# ---------------------------------------------------------------------------
+
+
+def _step2(q: jnp.ndarray, r: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One step-2 pass: complement block + MULT X + MULT Y."""
+    k = 2.0 - r
+    return q * k, r * k
+
+
+def gs_reciprocal_normalized(
+    m: jnp.ndarray, *, p: int = DEFAULT_P, iters: int, variant: str = "feedback"
+) -> jnp.ndarray:
+    """K ≈ 1/m for m ∈ [1, 2), in float32. `iters` step-2 passes."""
+    k1 = lut.lookup_reciprocal(m, p)
+    m32 = m.astype(jnp.float32)
+    q1 = k1  # N = 1 for reciprocal: q1 = 1·K1
+    r1 = m32 * k1
+    if variant == "pipelined":
+        # Unrolled: one "multiplier pair" per pass in the program text.
+        q, r = q1, r1
+        for _ in range(iters):
+            q, r = _step2(q, r)
+        return q
+    elif variant == "feedback":
+        # fori_loop: the loop-carried (q, r) is the feedback wire; the
+        # initial carry is the logic-block mux selecting r1 on pass one;
+        # `iters` is the predetermined counter value.
+        def body(_, qr):
+            return _step2(*qr)
+
+        q, _ = jax.lax.fori_loop(0, iters, body, (q1, r1))
+        return q
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def gs_rsqrt_normalized(
+    m: jnp.ndarray, *, p: int = DEFAULT_P, iters: int, variant: str = "feedback"
+) -> jnp.ndarray:
+    """K ≈ 1/sqrt(m) for m ∈ [1, 4), in float32."""
+    y0 = lut.lookup_rsqrt(m, p)
+    m32 = m.astype(jnp.float32)
+    g = m32 * y0  # → sqrt(m)
+    h = 0.5 * y0  # → 1/(2 sqrt(m))
+
+    def body(g, h):
+        r = 0.5 - g * h
+        return g + g * r, h + h * r
+
+    if variant == "pipelined":
+        for _ in range(iters):
+            g, h = body(g, h)
+    elif variant == "feedback":
+        g, h = jax.lax.fori_loop(0, iters, lambda _, gh: body(*gh), (g, h))
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return 2.0 * h
+
+
+# ---------------------------------------------------------------------------
+# Full-range public ops (normalize → iterate → renormalize, special values)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+def gs_reciprocal(
+    d: jnp.ndarray,
+    *,
+    p: int = DEFAULT_P,
+    iters: int | None = None,
+    variant: str = "feedback",
+) -> jnp.ndarray:
+    """Goldschmidt reciprocal 1/d, any sign/scale; matches d's dtype."""
+    dtype = d.dtype
+    if iters is None:
+        iters = iters_for(p, _target_bits(dtype))
+    d32 = d.astype(jnp.float32)
+    sign = jnp.where(jnp.signbit(d32), -1.0, 1.0).astype(jnp.float32)
+    mag = jnp.abs(d32)
+    m, e = _normalize(mag)
+    q = gs_reciprocal_normalized(m, p=p, iters=iters, variant=variant)
+    out = sign * jnp.ldexp(q, -e)
+    # Specials: 1/0 = ±inf, 1/±inf = ±0, nan propagates via sign/mag math.
+    out = jnp.where(mag == 0.0, sign * jnp.inf, out)
+    out = jnp.where(jnp.isinf(mag), sign * 0.0, out)
+    out = jnp.where(jnp.isnan(d32), jnp.nan, out)
+    return out.astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+def gs_divide(
+    n: jnp.ndarray,
+    d: jnp.ndarray,
+    *,
+    p: int = DEFAULT_P,
+    iters: int | None = None,
+    variant: str = "feedback",
+) -> jnp.ndarray:
+    """Goldschmidt division n/d.
+
+    Faithful to the paper's Fig. 1 dataflow: q1 = N·K1 (MULT 1) runs against
+    r1 = D·K1 (MULT 2), then the shared step-2 pipe.  We implement it as
+    n · gs_reciprocal-style iteration with the numerator folded into q1 so
+    the convergent factors K_i multiply q directly (no final extra multiply).
+    """
+    dtype = jnp.result_type(n, d)
+    if iters is None:
+        iters = iters_for(p, _target_bits(dtype))
+    n32, d32 = n.astype(jnp.float32), d.astype(jnp.float32)
+    sign = jnp.where(jnp.signbit(n32) ^ jnp.signbit(d32), -1.0, 1.0).astype(
+        jnp.float32)
+    nmag, dmag = jnp.abs(n32), jnp.abs(d32)
+    mn, en = _normalize(nmag)
+    md, ed = _normalize(dmag)
+    k1 = lut.lookup_reciprocal(md, DEFAULT_P if p is None else p)
+    q = mn * k1  # MULT 1
+    r = md * k1  # MULT 2
+    if variant == "pipelined":
+        for _ in range(iters):
+            q, r = _step2(q, r)
+    else:
+        q, _ = jax.lax.fori_loop(0, iters, lambda _, qr: _step2(*qr), (q, r))
+    out = sign * jnp.ldexp(q, en - ed)
+    out = jnp.where(dmag == 0.0, sign * jnp.inf, out)
+    out = jnp.where(jnp.isinf(dmag), sign * 0.0, out)
+    out = jnp.where((nmag == 0.0) & (dmag != 0.0), sign * 0.0, out)
+    bad = (
+        jnp.isnan(n32)
+        | jnp.isnan(d32)
+        | (jnp.isinf(nmag) & jnp.isinf(dmag))
+        | ((nmag == 0.0) & (dmag == 0.0))
+    )
+    out = jnp.where(bad, jnp.nan, out)
+    out = jnp.where(jnp.isinf(nmag) & ~jnp.isinf(dmag), sign * jnp.inf, out)
+    return out.astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+def gs_rsqrt(
+    x: jnp.ndarray,
+    *,
+    p: int = DEFAULT_P,
+    iters: int | None = None,
+    variant: str = "feedback",
+) -> jnp.ndarray:
+    """Goldschmidt 1/sqrt(x) (the [4] square-root-reciprocal variant)."""
+    dtype = x.dtype
+    if iters is None:
+        iters = iters_for(p, _target_bits(dtype))
+    x32 = x.astype(jnp.float32)
+    m, e = _normalize(x32)  # m ∈ [1,2)
+    # Force even exponent: m' ∈ [1,4), e' even → sqrt(2^e') = 2^(e'/2).
+    odd = (e % 2) != 0
+    m = jnp.where(odd, m * 2.0, m)
+    e = jnp.where(odd, e - 1, e)
+    k = gs_rsqrt_normalized(m, p=p, iters=iters, variant=variant)
+    out = jnp.ldexp(k, -(e // 2))
+    out = jnp.where(x32 == 0.0, jnp.inf, out)
+    out = jnp.where(jnp.isinf(x32), 0.0, out)
+    out = jnp.where((x32 < 0.0) | jnp.isnan(x32), jnp.nan, out)
+    return out.astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+def gs_sqrt(
+    x: jnp.ndarray,
+    *,
+    p: int = DEFAULT_P,
+    iters: int | None = None,
+    variant: str = "feedback",
+) -> jnp.ndarray:
+    """Goldschmidt sqrt(x): the g-sequence of the same iteration."""
+    dtype = x.dtype
+    if iters is None:
+        iters = iters_for(p, _target_bits(dtype))
+    x32 = x.astype(jnp.float32)
+    m, e = _normalize(x32)
+    odd = (e % 2) != 0
+    m = jnp.where(odd, m * 2.0, m)
+    e = jnp.where(odd, e - 1, e)
+    y0 = lut.lookup_rsqrt(m, p)
+    g = m.astype(jnp.float32) * y0
+    h = 0.5 * y0
+
+    def body(g, h):
+        r = 0.5 - g * h
+        return g + g * r, h + h * r
+
+    if variant == "pipelined":
+        for _ in range(iters):
+            g, h = body(g, h)
+    else:
+        g, h = jax.lax.fori_loop(0, iters, lambda _, gh: body(*gh), (g, h))
+    out = jnp.ldexp(g, e // 2)
+    out = jnp.where(x32 == 0.0, 0.0, out)
+    out = jnp.where(jnp.isinf(x32), jnp.inf, out)
+    out = jnp.where((x32 < 0.0) | jnp.isnan(x32), jnp.nan, out)
+    return out.astype(dtype)

@@ -1,0 +1,183 @@
+"""Cycle/area model of the two datapaths (paper §IV, Fig. 4).
+
+A small dataflow scheduler reproduces the paper's quantitative claims:
+
+* lookup = 1 cycle (ROM read, from [4]),
+* each multiplication = 4 cycles (paper §III: "a multiplication operation
+  takes 4 cycles"),
+* the 2's complement block is wired inversion fused into the multiplier
+  operand latch — 0 cycles on the critical path (the one's-complement trick
+  of [4]; this is the only latency assignment consistent with the paper's
+  "9 cycles to q2/r2" count: 1 + 4 + 4 = 9),
+* the feedback mux (logic block) costs **one extra latch cycle when the
+  feedback path is first engaged** — the select flips from `r1` to
+  `r_{2..i}` and the fed-back operand must traverse the mux register before
+  the reused multiplier can start.  Once engaged, the counter holds the
+  select stable, so later passes re-enter without re-latching.  This yields
+  the paper's claim exactly: feedback = pipelined + 1 cycle total, for any
+  number of passes ("the trade off of 1 clock cycle for the general case").
+
+Area: the pipelined design of [4] (Figs. 1–2) uses a dedicated multiplier
+pair per pass (the final pass needs only the q multiplier) and a dedicated
+2's-complement block per pass; the feedback design keeps MULT1, MULT2 and a
+single X/Y pair plus one complement block and the logic block.  For the
+paper's 3-pass configuration that removes 3 multipliers and 2 complement
+units — §V's headline numbers.
+
+The logic block itself (§III truth table + counter) is modeled as an
+explicit state machine in :class:`LogicBlock` and tested against the table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "LogicBlock",
+    "Schedule",
+    "schedule_division",
+    "area",
+    "AREA_UNITS",
+    "LOOKUP_CYCLES",
+    "MULT_CYCLES",
+    "COMPL_CYCLES",
+    "FEEDBACK_MUX_LATCH",
+]
+
+LOOKUP_CYCLES = 1
+MULT_CYCLES = 4
+COMPL_CYCLES = 0  # wired inversion fused into the multiplier operand latch
+FEEDBACK_MUX_LATCH = 1  # one-time latch when the feedback path engages
+
+
+class LogicBlock:
+    """The paper's §III logic block: 2-way priority mux + pass counter.
+
+    Truth table (O = output):
+
+        r1 present | r_{2,3,..i} present | O
+        -----------+---------------------+----------
+             1     |          0          | r1
+             0     |          1          | r_{2,3,..i}
+             1     |          1          | r_{2,3,..i}   (feedback priority)
+             0     |          0          | 0
+
+    The counter "set[s] itself after the first time r1 has passed" and
+    resets "after the predetermined number of cycles are over" so the next
+    division starts from r1 again.
+    """
+
+    def __init__(self, predetermined_passes: int):
+        self.predetermined = predetermined_passes
+        self.counter = 0
+
+    @staticmethod
+    def select(r1_present: bool, rfb_present: bool, r1, rfb):
+        """Combinational mux exactly per the truth table."""
+        if rfb_present:
+            return rfb  # rows 2 and 3: feedback has priority
+        if r1_present:
+            return r1  # row 1
+        return 0  # row 4
+
+    def step(self, r1_present: bool, rfb_present: bool, r1, rfb):
+        """One clocked pass through the block; returns (output, done)."""
+        out = self.select(r1_present, rfb_present, r1, rfb)
+        self.counter += 1
+        done = self.counter >= self.predetermined
+        if done:
+            self.counter = 0  # reset for the next division (§III)
+        return out, done
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    name: str
+    unit: str
+    start: int
+    end: int  # result available at end of this cycle
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    design: str
+    passes: int
+    ops: Tuple[Op, ...]
+    makespan: int
+
+    def q2_cycle(self) -> Optional[int]:
+        """Cycle at which q2/r2 (first step-2 outputs) are available."""
+        for op in self.ops:
+            if op.name == "q2":
+                return op.end
+        return None
+
+    def table(self) -> str:
+        rows = [f"{'op':<8}{'unit':<12}{'start':>6}{'end':>6}"]
+        rows += [
+            f"{o.name:<8}{o.unit:<12}{o.start:>6}{o.end:>6}" for o in self.ops
+        ]
+        rows.append(f"makespan: {self.makespan} cycles")
+        return "\n".join(rows)
+
+
+def schedule_division(design: str, passes: int = 3) -> Schedule:
+    """ASAP schedule of N/D with `passes` step-2 applications.
+
+    design: 'pipelined' ([4], Figs. 1–2) or 'feedback' (this paper, Fig. 3).
+    """
+    if design not in ("pipelined", "feedback"):
+        raise ValueError(design)
+    ops: List[Op] = []
+    t = 0
+    ops.append(Op("K1", "ROM", t, t + LOOKUP_CYCLES))
+    t_k1 = t + LOOKUP_CYCLES
+    # MULT1 / MULT2 run concurrently on separate multipliers in both designs.
+    ops.append(Op("q1", "MULT1", t_k1, t_k1 + MULT_CYCLES))
+    ops.append(Op("r1", "MULT2", t_k1, t_k1 + MULT_CYCLES))
+    t_avail = t_k1 + MULT_CYCLES  # q1, r1 ready (cycle 5)
+
+    fb_engaged = False
+    for i in range(1, passes + 1):
+        # complement K_{i+1} = 2 - r_i : wired, 0 cycles
+        t_in = t_avail
+        if design == "feedback" and i >= 2 and not fb_engaged:
+            t_in += FEEDBACK_MUX_LATCH  # logic-block select flips once
+            fb_engaged = True
+        if design == "pipelined":
+            xunit, yunit = f"MULTX{i}", f"MULTY{i}"
+        else:
+            xunit, yunit = "MULTX", "MULTY"  # reused pair
+        ops.append(Op(f"K{i + 1}", f"COMPL{i if design == 'pipelined' else ''}",
+                      t_in, t_in + COMPL_CYCLES))
+        ops.append(Op(f"q{i + 1}", xunit, t_in, t_in + MULT_CYCLES))
+        if i < passes:  # final pass produces only q (paper Fig. 2)
+            ops.append(Op(f"r{i + 1}", yunit, t_in, t_in + MULT_CYCLES))
+        t_avail = t_in + MULT_CYCLES
+
+    return Schedule(design, passes, tuple(ops), t_avail)
+
+
+AREA_UNITS = ("multipliers", "complementers", "mux_counters", "rom")
+
+
+def area(design: str, passes: int = 3) -> Dict[str, int]:
+    """Unit counts for each design (paper §V's area comparison)."""
+    if design == "pipelined":
+        # MULT1, MULT2 + a pair per pass, last pass single: 2 + 2(passes-1) + 1
+        return {
+            "multipliers": 2 + 2 * (passes - 1) + 1,
+            "complementers": passes,
+            "mux_counters": 0,
+            "rom": 1,
+        }
+    if design == "feedback":
+        return {"multipliers": 4, "complementers": 1, "mux_counters": 1, "rom": 1}
+    raise ValueError(design)
+
+
+def savings(passes: int = 3) -> Dict[str, int]:
+    """Hardware removed by the feedback design (paper: 3 mults, 2 compl)."""
+    a, b = area("pipelined", passes), area("feedback", passes)
+    return {k: a[k] - b[k] for k in ("multipliers", "complementers")}

@@ -1,0 +1,126 @@
+"""ROM reciprocal / rsqrt-seed tables.
+
+The paper (following Ercegovac et al. [4] and Sarma–Matula [7]) seeds
+Goldschmidt iteration with an "optimal reciprocal table": ``p`` bits in,
+``p + 2`` bits out.  For a normalized divisor ``D = 1.d1 d2 ... ∈ [1, 2)``
+the table is indexed by the top ``p`` fraction bits of ``D`` and returns a
+``(p+2)``-bit approximation ``K1`` of ``1/D`` chosen to minimize the maximum
+relative error over the input interval — i.e. the correctly-rounded
+reciprocal of the *midpoint* of each 2^-p-wide input bucket (Sarma–Matula's
+"optimal" construction).
+
+Tables are built once per ``p`` in numpy (this is the ROM-burn step of the
+hardware design) and exposed both as
+
+* an integer table (``uint32`` entries in ``[2^(p+1), 2^(p+2)]``) — used by
+  the bit-accurate fixed-point datapath emulation, and
+* a float table (entries exactly ``k * 2^-(p+2)``) — gathered by the float
+  and Pallas implementations.
+
+An analogous table seeds square-root-reciprocal iteration ([4] §"square
+root reciprocal"; the paper's §IV notes its variants are unaffected by the
+hardware reduction): input normalized to ``M ∈ [1, 4)`` (even exponent),
+output a ``(p+2)``-bit approximation of ``1/sqrt(M) ∈ (0.5, 1]``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "reciprocal_table_int",
+    "reciprocal_table_f32",
+    "rsqrt_table_int",
+    "rsqrt_table_f32",
+    "lookup_reciprocal",
+    "lookup_rsqrt",
+    "seed_rel_error_bound",
+]
+
+
+@functools.lru_cache(maxsize=None)
+def reciprocal_table_int(p: int) -> np.ndarray:
+    """(p+2)-bit optimal reciprocal ROM: index = top p fraction bits of D.
+
+    Entry ``i`` covers ``D ∈ [1 + i·2^-p, 1 + (i+1)·2^-p)`` and stores
+    ``round(2^(p+2) · 2 / (D_lo + D_hi))`` — the (p+2)-bit rounding of the
+    reciprocal of the bucket midpoint.  Values lie in ``[2^(p+1), 2^(p+2)]``
+    (i.e. ``K1 ∈ [0.5, 1.0]``); the all-ones+1 top entry for bucket 0 is
+    clamped to ``2^(p+2)`` which represents exactly 1.0.
+    """
+    if not (2 <= p <= 16):
+        raise ValueError(f"table index width p={p} out of supported range [2, 16]")
+    i = np.arange(2**p, dtype=np.float64)
+    d_lo = 1.0 + i * 2.0**-p
+    d_hi = 1.0 + (i + 1.0) * 2.0**-p
+    mid_recip = 2.0 / (d_lo + d_hi)
+    k = np.rint(mid_recip * 2.0 ** (p + 2)).astype(np.uint32)
+    return np.clip(k, 2 ** (p + 1), 2 ** (p + 2)).astype(np.uint32)
+
+
+@functools.lru_cache(maxsize=None)
+def reciprocal_table_f32(p: int) -> np.ndarray:
+    """Float view of the ROM: entries are exactly ``k * 2^-(p+2)``."""
+    return (reciprocal_table_int(p).astype(np.float64) * 2.0 ** -(p + 2)).astype(
+        np.float32
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def rsqrt_table_int(p: int) -> np.ndarray:
+    """(p+2)-bit rsqrt seed ROM over ``M ∈ [1, 4)``, 2^p buckets of width 3·2^-p.
+
+    Midpoint construction as for the reciprocal table.  ``1/sqrt(M) ∈
+    (0.5, 1]`` so the same ``[2^(p+1), 2^(p+2)]`` integer encoding applies.
+    """
+    if not (2 <= p <= 16):
+        raise ValueError(f"table index width p={p} out of supported range [2, 16]")
+    i = np.arange(2**p, dtype=np.float64)
+    width = 3.0 * 2.0**-p
+    m_lo = 1.0 + i * width
+    m_hi = 1.0 + (i + 1.0) * width
+    # Minimize max relative error of K ≈ 1/sqrt(M) over the bucket: the
+    # optimal constant is 2/(sqrt(m_lo)+sqrt(m_hi)) * a second-order term;
+    # the simple geometric-mean reciprocal sqrt is within rounding of it.
+    mid_rsqrt = 1.0 / np.sqrt(np.sqrt(m_lo * m_hi))
+    k = np.rint(mid_rsqrt * 2.0 ** (p + 2)).astype(np.uint32)
+    return np.clip(k, 2 ** (p + 1), 2 ** (p + 2)).astype(np.uint32)
+
+
+@functools.lru_cache(maxsize=None)
+def rsqrt_table_f32(p: int) -> np.ndarray:
+    return (rsqrt_table_int(p).astype(np.float64) * 2.0 ** -(p + 2)).astype(np.float32)
+
+
+def seed_rel_error_bound(p: int) -> float:
+    """Measured max relative error of the reciprocal ROM (≈ 2^-(p+1))."""
+    tab = reciprocal_table_int(p).astype(np.float64) * 2.0 ** -(p + 2)
+    # worst case is at bucket endpoints
+    i = np.arange(2**p, dtype=np.float64)
+    errs = []
+    for d in (1.0 + i * 2.0**-p, 1.0 + (i + 1) * 2.0**-p - 2.0**-53):
+        errs.append(np.max(np.abs(tab * d - 1.0)))
+    return float(max(errs))
+
+
+def lookup_reciprocal(m: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Gather K1 ≈ 1/m for normalized m ∈ [1, 2).  Returns float32.
+
+    This is the ROM read of the paper's Fig. 1 ("LOOK-UP TABLE"): the index
+    is the top ``p`` fraction bits of the divisor.
+    """
+    tab = jnp.asarray(reciprocal_table_f32(p))
+    idx = jnp.floor((m.astype(jnp.float32) - 1.0) * (2.0**p)).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, 2**p - 1)
+    return tab[idx]
+
+
+def lookup_rsqrt(m: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Gather K ≈ 1/sqrt(m) for normalized m ∈ [1, 4).  Returns float32."""
+    tab = jnp.asarray(rsqrt_table_f32(p))
+    idx = jnp.floor((m.astype(jnp.float32) - 1.0) * (2.0**p / 3.0)).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, 2**p - 1)
+    return tab[idx]

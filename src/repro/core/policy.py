@@ -1,0 +1,104 @@
+"""NumericsPolicy: the framework-wide switch for the paper's technique.
+
+Every division-shaped operation in the model/optimizer stack (softmax
+denominators, RMSNorm/LayerNorm rsqrt, MoE router renormalization, Adam
+update) is routed through a :class:`NumericsPolicy` so the Goldschmidt
+datapaths are a first-class, config-selectable feature rather than a
+micro-benchmark:
+
+* ``exact``          — XLA-native ``/``, ``jax.lax.rsqrt`` (baseline),
+* ``gs_pipelined``   — unrolled Goldschmidt ([4]'s replicated-multiplier
+                        datapath),
+* ``gs_feedback``    — the paper's multiplier-reuse datapath
+                        (``fori_loop`` + logic-block seeding).
+
+``p_bits`` and ``iters`` correspond to the ROM index width and the logic
+block's predetermined counter value.  ``iters=None`` derives the count from
+the output dtype exactly as §III describes ("predetermined if we are sure
+of how many bits accuracy we need").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import goldschmidt as gs
+
+__all__ = ["NumericsPolicy", "EXACT", "GS_FEEDBACK", "GS_PIPELINED"]
+
+_MODES = ("exact", "gs_pipelined", "gs_feedback")
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    mode: str = "gs_feedback"
+    p_bits: int = gs.DEFAULT_P
+    iters: Optional[int] = None  # None → derived from dtype (accuracy counter)
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {self.mode!r}")
+
+    @property
+    def variant(self) -> str:
+        return "pipelined" if self.mode == "gs_pipelined" else "feedback"
+
+    # -- the four division-shaped primitives ---------------------------------
+
+    def reciprocal(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.mode == "exact":
+            return 1.0 / x
+        return gs.gs_reciprocal(x, p=self.p_bits, iters=self.iters,
+                                variant=self.variant)
+
+    def divide(self, n: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+        if self.mode == "exact":
+            return n / d
+        return gs.gs_divide(n, d, p=self.p_bits, iters=self.iters,
+                            variant=self.variant)
+
+    def rsqrt(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.mode == "exact":
+            return jax.lax.rsqrt(x)
+        return gs.gs_rsqrt(x, p=self.p_bits, iters=self.iters,
+                           variant=self.variant)
+
+    def sqrt(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.mode == "exact":
+            return jnp.sqrt(x)
+        return gs.gs_sqrt(x, p=self.p_bits, iters=self.iters,
+                          variant=self.variant)
+
+    # -- composite ops used across the stack ----------------------------------
+
+    def softmax(self, x: jnp.ndarray, axis: int = -1,
+                where: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Numerically-stable softmax with a Goldschmidt denominator."""
+        m = jnp.max(x, axis=axis, keepdims=True, where=where,
+                    initial=-jnp.inf if where is not None else None) \
+            if where is not None else jnp.max(x, axis=axis, keepdims=True)
+        m = jax.lax.stop_gradient(m)
+        e = jnp.exp(x - m)
+        if where is not None:
+            e = jnp.where(where, e, 0.0)
+        s = jnp.sum(e, axis=axis, keepdims=True)
+        return e * self.reciprocal(s)
+
+    def normalize_rms(self, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+        """x * rsqrt(mean(x^2) + eps) over the last axis (fp32 accumulate)."""
+        x32 = x.astype(jnp.float32)
+        ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        return (x32 * self.rsqrt(ms + eps)).astype(x.dtype)
+
+
+EXACT = NumericsPolicy(mode="exact")
+GS_FEEDBACK = NumericsPolicy(mode="gs_feedback")
+GS_PIPELINED = NumericsPolicy(mode="gs_pipelined")
+
+
+def from_name(name: str, **kw) -> NumericsPolicy:
+    return NumericsPolicy(mode=name, **kw)

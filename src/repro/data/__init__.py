@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticLM, make_batch  # noqa: F401

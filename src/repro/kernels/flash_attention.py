@@ -1,0 +1,167 @@
+"""Blocked online-softmax (flash) attention with a Goldschmidt epilogue.
+
+Division site #3 of DESIGN.md §3.  The online-softmax recurrence is kept
+division-free (running max + running *unnormalized* sum); the single
+normalization ``acc / l`` is deferred to the last KV block and computed by
+the paper's Goldschmidt datapath on the (block_q, 1) denominator column —
+the "one reused multiplier" epilogue instead of a divide per KV block.
+This is itself the paper's insight applied at the kernel level: the
+rescale multiplications are the reused MULT X/Y; the final reciprocal is
+one Goldschmidt pass rather than `bq * n_kv` hardware divides.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) with the kv axis innermost
+("arbitrary" semantics — it carries the accumulator).  GQA is expressed in
+the k/v BlockSpec index_map (head -> head // group), so KV tiles are
+fetched once per group without materializing repeated heads.
+
+VMEM per step (f32): q/k/v/o tiles (bq+2*bkv+bq)*D + logits bq*bkv
+~= (128+256+128)*128*4B + 128*128*4B ≈ 320 KB — comfortably sub-VMEM;
+the MXU sees (bq, D) x (D, bkv) and (bq, bkv) x (bkv, D) contractions.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, tab_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            sm_scale, causal, block_q, block_kv, n_kv_blocks, p, iters,
+            variant):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bkv, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # (bq, bkv)
+        if causal:
+            rows = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0
+            )
+            cols = ik * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1
+            )
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # rescale of the old accumulator
+        e = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(e, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            e, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # Skip fully-masked blocks (above the diagonal).
+        @pl.when(ik * block_kv <= iq * block_q + block_q - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _epilogue():
+        l = jnp.maximum(l_ref[...], 1e-30)  # guard: fully-masked row
+        inv = common.recip_positive(
+            l, tab_ref[...], p=p, iters=iters, variant=variant
+        )
+        o_ref[0, 0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "sm_scale", "block_q", "block_kv", "p", "iters", "variant",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    p: int = common.DEFAULT_P,
+    iters: int = 2,
+    variant: str = "feedback",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q: (B, H, S, D); k/v: (B, KH, S, D) with H % KH == 0.  Returns (B,H,S,D)."""
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    n_q = s // block_q
+    n_kv = s // block_kv
+    table = common.rom_table(p)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            sm_scale=sm_scale,
+            causal=causal,
+            block_q=block_q,
+            block_kv=block_kv,
+            n_kv_blocks=n_kv,
+            p=p,
+            iters=iters,
+            variant=variant,
+        ),
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, d),
+                lambda ib, ih, iq, ik, grp=group: (ib, ih // grp, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, d),
+                lambda ib, ih, iq, ik, grp=group: (ib, ih // grp, ik, 0),
+            ),
+            pl.BlockSpec((1 << p, 1), lambda ib, ih, iq, ik: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, table)
+    return out

@@ -1,0 +1,72 @@
+"""Fused RMSNorm with Goldschmidt rsqrt, as a Pallas kernel.
+
+Division site #2 of DESIGN.md §3: ``x * rsqrt(mean(x^2) + eps) * gain``
+with the rsqrt computed by [4]'s coupled Goldschmidt iteration on the
+(block_rows, 1) mean-square column — the fused-epilogue form of the
+paper's datapath.  fp32 accumulation regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def _kernel(x_ref, g_ref, tab_ref, o_ref, *, p, iters, variant, eps, d_real):
+    x = x_ref[...].astype(jnp.float32)
+    gain = g_ref[...].astype(jnp.float32)
+    # Padded feature lanes are zero: sum is exact; divide by the REAL width.
+    ms = jnp.sum(x * x, axis=-1, keepdims=True) * (1.0 / d_real)
+    inv = common.rsqrt_positive(
+        ms + eps, tab_ref[...], p=p, iters=iters, variant=variant
+    )
+    o_ref[...] = (x * inv * gain).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "iters", "variant", "eps", "block_rows", "interpret"),
+)
+def gs_rmsnorm(
+    x: jnp.ndarray,
+    gain: jnp.ndarray,
+    *,
+    eps: float = 1e-6,
+    p: int = common.DEFAULT_P,
+    iters: int = 2,
+    variant: str = "feedback",
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """RMSNorm over the last axis; gain has shape (d,)."""
+    orig_shape, orig_dtype = x.shape, x.dtype
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    d_pad = -(-d // 128) * 128
+    rows_pad = -(-rows // block_rows) * block_rows
+    x2 = jnp.pad(x2.astype(jnp.float32), ((0, rows_pad - rows), (0, d_pad - d)))
+    g2 = jnp.pad(gain.astype(jnp.float32), (0, d_pad - d)).reshape(1, d_pad)
+    table = common.rom_table_rsqrt(p)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, p=p, iters=iters, variant=variant, eps=eps, d_real=d
+        ),
+        grid=(rows_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1 << p, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, d_pad), orig_dtype),
+        interpret=interpret,
+    )(x2, g2, table)
+    return out[:rows, :d].reshape(orig_shape)

@@ -1,0 +1,97 @@
+"""Elementwise Goldschmidt rsqrt / sqrt as a Pallas TPU kernel.
+
+[4]'s coupled square-root iteration (g -> sqrt, 2h -> rsqrt), seeded from
+the rsqrt ROM over M in [1, 4) (even exponent), with the same
+feedback/pipelined datapath selection as :mod:`gs_recip`.  §IV of the paper
+notes the hardware reduction leaves these variants intact — the same single
+multiplier pair serves them with a different complement step
+(``0.5 - g*h`` instead of ``2 - r``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _kernel(x_ref, tab_ref, o_ref, *, p: int, iters: int, variant: str,
+            mode: str):
+    x = x_ref[...]
+    table = tab_ref[...]
+    _, e, mant = common.split_fields(x)
+    m = common.mantissa_to_m(mant)  # [1, 2)
+    # Even exponent: E = e-127; if odd, m *= 2 and E -= 1 so m in [1, 4).
+    E = e - 127
+    odd = (E & 1) != 0
+    m = jnp.where(odd, m * 2.0, m)
+    Eh = jnp.where(odd, (E - 1) // 2, E // 2)  # E/2 after evening, exact
+    g, h = common.gs_rsqrt_core(m, table, p=p, iters=iters, variant=variant)
+    if mode == "rsqrt":
+        val = 2.0 * h  # -> 1/sqrt(m)
+        scale = common.pow2_from_biased(127 - Eh)  # 2^(-E/2)
+    else:
+        val = g  # -> sqrt(m)
+        scale = common.pow2_from_biased(127 + Eh)  # 2^(E/2)
+    out = val * scale
+    zero_in = e == 0
+    inf_in = (e == 255) & (mant == 0)
+    nan_in = ((e == 255) & (mant != 0)) | (x < 0.0)
+    if mode == "rsqrt":
+        out = jnp.where(zero_in, jnp.inf, out)
+        out = jnp.where(inf_in, 0.0, out)
+    else:
+        out = jnp.where(zero_in, 0.0, out)
+        out = jnp.where(inf_in, jnp.inf, out)
+    out = jnp.where(nan_in, jnp.nan, out)
+    o_ref[...] = out
+
+
+def _run(x, *, p, iters, variant, block_rows, interpret, mode):
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    cols = 128
+    rows = -(-n // cols)
+    rows_pad = -(-rows // block_rows) * block_rows
+    flat = jnp.pad(flat, (0, rows_pad * cols - n), constant_values=1.0)
+    x2 = flat.reshape(rows_pad, cols)
+    table = common.rom_table_rsqrt(p)
+    out = pl.pallas_call(
+        functools.partial(_kernel, p=p, iters=iters, variant=variant, mode=mode),
+        grid=(rows_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1 << p, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, cols), jnp.float32),
+        interpret=interpret,
+    )(x2, table)
+    return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "iters", "variant", "block_rows", "interpret")
+)
+def gs_rsqrt(x, *, p: int = common.DEFAULT_P, iters: int = 2,
+             variant: str = "feedback", block_rows: int = DEFAULT_BLOCK_ROWS,
+             interpret: bool = True):
+    return _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+                interpret=interpret, mode="rsqrt")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "iters", "variant", "block_rows", "interpret")
+)
+def gs_sqrt(x, *, p: int = common.DEFAULT_P, iters: int = 2,
+            variant: str = "feedback", block_rows: int = DEFAULT_BLOCK_ROWS,
+            interpret: bool = True):
+    return _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+                interpret=interpret, mode="sqrt")

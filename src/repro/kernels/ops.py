@@ -1,0 +1,34 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Shape-polymorphic dispatch: callers hand any-shaped arrays; wrappers pad /
+reshape to kernel tiling (done inside each kernel module) and restore.
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
+``interpret=False``) and the same BlockSpecs compile via Mosaic.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gs_adam import gs_adam_update
+from repro.kernels.gs_recip import gs_recip
+from repro.kernels.gs_rmsnorm import gs_rmsnorm
+from repro.kernels.gs_rsqrt import gs_rsqrt, gs_sqrt
+from repro.kernels.gs_softmax import gs_softmax
+
+__all__ = [
+    "flash_attention",
+    "gs_adam_update",
+    "gs_recip",
+    "gs_rmsnorm",
+    "gs_rsqrt",
+    "gs_softmax",
+    "gs_sqrt",
+    "interpret_default",
+]
+
+
+def interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"

@@ -1,0 +1,446 @@
+"""Trip-count-aware HLO text analysis for the roofline (EXPERIMENTS.md §Roofline).
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE
+(measured in this container: a 7-iteration scanned matmul reports 1/7 the
+FLOPs of its unrolled twin).  This framework scans over layers, attention
+blocks, MoE chunks and SSM steps — everything interesting lives in loops —
+so the roofline must multiply loop bodies by their trip counts.
+
+The parser walks ``compiled.as_text()`` (post-SPMD, per-device):
+
+* computations are parsed into instruction lists with a local symbol table
+  (operand shapes resolved by definition, incl. computation parameters),
+* ``while`` ops read ``backend_config={"known_trip_count":{"n":...}}``
+  (fallback: the s32 constant compared with LT in the condition), and
+  multiply their body's accumulators,
+* FLOPs: ``dot`` = 2 * |result| * prod(lhs contracting dims);
+  ``convolution`` approximated alike; dots inside fused computations are
+  attributed to the caller,
+* traffic bytes (memory-term proxy, conservative upper bound): per
+  instruction, resolved operand bytes + result bytes, skipping zero-cost
+  ops (parameter/constant/gte/tuple/bitcast/iota); fusion interiors are
+  not double counted,
+* collective bytes: operand bytes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute / ragged-all-to-all,
+  split per collective kind (the prompt's definition).
+
+Outputs feed the three roofline terms:
+    compute  = flops / (chips * PEAK_FLOPS)
+    memory   = traffic / (chips * HBM_BW)
+    collective = collective_bytes / (chips * ICI_BW)
+(all per-device quantities: the HLO is already the per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s4": 1, "u4": 1, "f4e2m1fn": 1, "f8e8m0fnu": 1, "f8e4m3": 1,
+    "f8e3m4": 1, "token": 0, "opaque": 0,
+}
+
+# Ops whose operands/results plausibly hit HBM on the TPU target.  The CPU
+# backend leaves elementwise chains (add/mul/exp/...) as standalone ops or
+# per-op kLoop wrapper fusions; on TPU those fuse into neighboring
+# kernels, so standalone elementwise ops are NOT charged traffic — only
+# contraction, data-movement and fusion ops are.  This makes the memory
+# term a *TPU-modelled* figure derived from the compiled graph structure
+# rather than a CPU-artifact figure (see EXPERIMENTS.md §Roofline notes).
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "copy", "copy-start",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "reduce", "reduce-window", "sort", "select-and-scatter",
+    "concatenate", "pad", "slice", "cholesky", "triangular-solve",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+    def operands(self) -> List[str]:
+        # ``rest`` starts just after the opcode's '(' — find the matching
+        # close paren, then pull the %name references inside it.
+        depth = 1
+        end = len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return re.findall(r"%([\w.\-]+)", self.rest[:end])
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=\{([^}]*)\}", self.rest)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    param_types: Dict[str, str]
+
+    def sym(self) -> Dict[str, str]:
+        table = dict(self.param_types)
+        for ins in self.instrs:
+            table[ins.name] = ins.type_str
+        return table
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.startswith(("HloModule", "//", "#")):
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            params: Dict[str, str] = {}
+            for pm in re.finditer(r"([\w.\-]+):\s*(\([^)]*\)|[\w\[\]{},]+)",
+                                  hdr.group(2)):
+                params[pm.group(1)] = pm.group(2)
+            cur = Computation(hdr.group(1), [], params)
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m and cur is not None:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.rest)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%([\w.\-]+)", ins.rest)
+    if cm and cm.group(1) in comps:
+        consts = [
+            int(mm.group(1))
+            for i2 in comps[cm.group(1)].instrs
+            for mm in [re.fullmatch(r"constant\((\d+)\)",
+                                    i2.opcode + "(" + i2.rest)]
+            if mm
+        ]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _dot_flops(ins: Instr, sym: Dict[str, str]) -> float:
+    res = _shape_dims(ins.type_str)
+    ops = ins.operands()
+    if res is None or not ops or ops[0] not in sym:
+        return 0.0
+    _, rdims = res
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    lhs = _shape_dims(sym[ops[0]])
+    if lhs is None:
+        return 0.0
+    _, ldims = lhs
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(ldims):
+                contract *= ldims[i]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class Accum:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Accum", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.collective.items():
+            self.collective[k] = self.collective.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + int(v * mult)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective.values())
+
+
+# fusion interiors containing any of these ops pay HBM traffic; pure
+# elementwise wrapper fusions (the CPU backend wraps EVERY elementwise op
+# in a kLoop fusion) are modelled as fused-away on the TPU target.
+_HEAVY_INTERIOR = {
+    "dot", "convolution", "reduce", "reduce-window", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "sort", "concatenate", "pad",
+    "slice", "select-and-scatter", "copy",
+}
+
+
+def _fusion_is_heavy(comp: Computation, comps: Dict[str, Computation],
+                     _seen=None) -> bool:
+    if _seen is None:
+        _seen = set()
+    if comp.name in _seen:
+        return False
+    _seen.add(comp.name)
+    for ins in comp.instrs:
+        if ins.opcode in _HEAVY_INTERIOR:
+            return True
+        if ins.opcode == "fusion":
+            cm = re.search(r"calls=%([\w.\-]+)", ins.rest)
+            if cm and cm.group(1) in comps and _fusion_is_heavy(
+                    comps[cm.group(1)], comps, _seen):
+                return True
+    return False
+
+
+def _fusion_traffic(ins: Instr, inner: Computation,
+                    sym: Dict[str, str]) -> float:
+    """HBM bytes for a fusion op, slice-aware.
+
+    A fusion whose interior merely dynamic-slices / gathers a parameter
+    reads only the slice on TPU, not the whole operand (the whole-operand
+    charge was the dominant over-count on loop-invariant attention tiles:
+    ~9 TiB on a 2-layer graph).  Parameters consumed via an interior
+    (dynamic-)slice/gather are charged at the interior op's RESULT size;
+    all other parameters and the fusion result are charged fully.
+    """
+    ops = ins.operands()
+    param_order = list(inner.param_types)
+    inner_sym = inner.sym()
+    # resolve bitcast/reshape/transpose chains back to parameters
+    alias: Dict[str, str] = {p: p for p in inner.param_types}
+    for i2 in inner.instrs:
+        if i2.opcode in ("bitcast", "reshape", "transpose", "copy"):
+            srcs = i2.operands()
+            if srcs and srcs[0] in alias:
+                alias[i2.name] = alias[srcs[0]]
+    sliced_bytes: Dict[str, float] = {}
+    dus_param = None
+    dus_update_bytes = 0.0
+    for i2 in inner.instrs:
+        if i2.opcode in ("dynamic-slice", "slice", "gather"):
+            srcs = i2.operands()
+            if srcs and srcs[0] in alias:
+                b = _shape_bytes(i2.type_str)
+                key = alias[srcs[0]]
+                sliced_bytes[key] = sliced_bytes.get(key, 0.0) + b
+        elif i2.opcode == "dynamic-update-slice":
+            srcs = [alias.get(s, s) for s in i2.operands()]
+            if srcs and srcs[0] in inner.param_types:
+                # in-place DUS: the big operand aliases the result; only
+                # the update slice is read+written.
+                dus_param = srcs[0]
+                upd = i2.operands()[1] if len(i2.operands()) > 1 else None
+                if upd is not None and upd in inner_sym:
+                    dus_update_bytes += 2.0 * _shape_bytes(inner_sym[upd])
+                elif upd is not None and upd in inner.param_types:
+                    dus_update_bytes += 2.0 * _shape_bytes(
+                        inner.param_types[upd])
+    if dus_param is not None:
+        total = dus_update_bytes
+    else:
+        total = _shape_bytes(ins.type_str)  # result write
+    for pname, opname in zip(param_order, ops):
+        if pname == dus_param:
+            continue  # aliased in place
+        if pname in sliced_bytes:
+            total += sliced_bytes[pname]
+        elif opname in sym:
+            total += _shape_bytes(sym[opname])
+    return total
+
+
+def _fusion_flops(comp: Computation, comps: Dict[str, Computation]) -> float:
+    sym = comp.sym()
+    total = 0.0
+    for ins in comp.instrs:
+        if ins.opcode in ("dot", "convolution"):
+            total += _dot_flops(ins, sym)
+        elif ins.opcode == "fusion":
+            cm = re.search(r"calls=%([\w.\-]+)", ins.rest)
+            if cm and cm.group(1) in comps:
+                total += _fusion_flops(comps[cm.group(1)], comps)
+    return total
+
+
+def analyze_computation(
+    comp: Computation, comps: Dict[str, Computation],
+    _memo: Optional[Dict[str, Accum]] = None,
+) -> Accum:
+    if _memo is None:
+        _memo = {}
+    if comp.name in _memo:
+        return _memo[comp.name]
+    sym = comp.sym()
+    acc = Accum()
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op in ("dot", "convolution"):
+            acc.flops += _dot_flops(ins, sym)
+        elif op == "fusion":
+            cm = re.search(r"calls=%([\w.\-]+)", ins.rest)
+            if cm and cm.group(1) in comps:
+                acc.flops += _fusion_flops(comps[cm.group(1)], comps)
+        elif op == "while":
+            body = re.search(r"body=%([\w.\-]+)", ins.rest)
+            if body and body.group(1) in comps:
+                sub = analyze_computation(comps[body.group(1)], comps, _memo)
+                acc.add(sub, _trip_count(ins, comps))
+            continue
+        elif op in ("call", "conditional", "async-start"):
+            for cm in re.finditer(
+                r"(?:to_apply|calls|branch_computations=\{)%?([\w.\-]+)",
+                ins.rest,
+            ):
+                if cm.group(1) in comps:
+                    acc.add(analyze_computation(comps[cm.group(1)], comps,
+                                                _memo))
+            continue
+        if op in COLLECTIVES or op.rstrip("-start").rstrip("-done") in COLLECTIVES:
+            base = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue  # counted at -start
+            bytes_ = sum(
+                _shape_bytes(sym[o]) for o in ins.operands() if o in sym
+            )
+            acc.collective[base] = acc.collective.get(base, 0.0) + bytes_
+            acc.coll_count[base] = acc.coll_count.get(base, 0) + 1
+        if op not in _TRAFFIC_OPS:
+            continue
+        if op == "fusion":
+            cm = re.search(r"calls=%([\w.\-]+)", ins.rest)
+            if cm and cm.group(1) in comps:
+                inner = comps[cm.group(1)]
+                if not _fusion_is_heavy(inner, comps):
+                    continue  # pure-elementwise wrapper: fuses away on TPU
+                acc.traffic += _fusion_traffic(ins, inner, sym)
+                continue
+        if op == "dynamic-update-slice":
+            ops_ = ins.operands()
+            upd = (_shape_bytes(sym[ops_[1]])
+                   if len(ops_) > 1 and ops_[1] in sym else 0.0)
+            acc.traffic += 2.0 * upd  # in-place: slice read+write only
+            continue
+        acc.traffic += _shape_bytes(ins.type_str)
+        acc.traffic += sum(_shape_bytes(sym[o]) for o in ins.operands()
+                           if o in sym)
+    _memo[comp.name] = acc
+    return acc
+
+
+def analyze_hlo_text(text: str) -> Accum:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return analyze_computation(entry, comps)
+
+
+def roofline_terms(acc: Accum, *, peak_flops: float, hbm_bw: float,
+                   ici_bw: float,
+                   xla_flops_once: float = 0.0,
+                   xla_bytes_once: float = 0.0) -> Dict[str, float]:
+    """Per-device seconds for each roofline term (HLO is per-device).
+
+    Two memory estimates are reported:
+      memory_s       — structural parse (conservative UPPER bound: charges
+                       loop-invariant operand reads per iteration),
+      memory_s_xla   — XLA's own fusion-aware 'bytes accessed', scaled by
+                       the analyzer/XLA flops ratio to undo the
+                       count-loop-bodies-once behavior.  Used for the
+                       'bound' label when available.
+    """
+    compute = acc.flops / peak_flops
+    memory = acc.traffic / hbm_bw
+    collective = acc.collective_bytes / ici_bw
+    terms: Dict[str, float] = {"compute_s": compute, "memory_s": memory,
+                               "collective_s": collective}
+    if xla_bytes_once and xla_flops_once:
+        scale = acc.flops / max(xla_flops_once, 1.0)
+        terms["memory_s_xla"] = xla_bytes_once * scale / hbm_bw
+    mem_for_bound = terms.get("memory_s_xla", memory)
+    label = {"compute": compute, "memory": mem_for_bound,
+             "collective": collective}
+    terms["bound"] = max(label, key=lambda k: label[k])
+    terms["step_s_lower_bound"] = max(compute, mem_for_bound, collective)
+    return terms
+
+
+def summarize(acc: Accum) -> Dict[str, object]:
+    return {
+        "flops": acc.flops,
+        "traffic_bytes": acc.traffic,
+        "collective_bytes": acc.collective_bytes,
+        "collective_by_kind": dict(acc.collective),
+        "collective_counts": dict(acc.coll_count),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+
+    with open(sys.argv[1]) as f:
+        acc = analyze_hlo_text(f.read())
+    print(json.dumps(summarize(acc), indent=2))

@@ -1,0 +1,193 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE two lines above must run before any other import (jax locks the
+device count at first init); this module is the only place the 512
+placeholder devices exist — tests and benches see 1 CPU device.
+
+Per cell this script:
+  1. builds the production mesh (single-pod (16,16) or multi-pod (2,16,16)),
+  2. builds ShapeDtypeStruct stand-ins for params/opt/batch/cache,
+  3. jits the real step function with the rule-engine shardings,
+  4. ``.lower().compile()`` — success proves the distribution config is
+     coherent (sharding divisibility, collective legality, memory layout),
+  5. records memory_analysis / cost_analysis / trip-count-aware HLO terms
+     (launch/analysis.py) to benchmarks/results/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse  # noqa: E402
+import hashlib  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import analysis, steps  # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.models import api  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def _fingerprint(cfg, shape_name: str, multi_pod: bool) -> str:
+    key = repr(cfg) + shape_name + str(multi_pod) + "rules-v1"
+    return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+
+def model_flops_per_device(cfg, shape_name: str, n_devices: int) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·tokens (train), 2·N_active·tokens
+    (inference forward), split per device."""
+    sh = configs.SHAPES[shape_name]
+    n_active = api.active_param_count(cfg)
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        total = 6.0 * n_active * tokens
+    elif sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * sh["global_batch"]
+    return total / n_devices
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             over: dict | None = None, tag: str = "") -> dict:
+    cfg = configs.get_config(arch, **(over or {}))
+    ok, why = configs.shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    jf, args, _ = steps.jitted_for_cell(cfg, mesh, shape_name)
+    with mesh:
+        lowered = jf.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    acc = analysis.analyze_hlo_text(hlo)
+    terms = analysis.roofline_terms(
+        acc, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW,
+        xla_flops_once=cost.get("flops", 0.0),
+        xla_bytes_once=cost.get("bytes accessed", 0.0),
+    )
+    mf = model_flops_per_device(cfg, shape_name, n_dev)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "tag": tag, "status": "ok", "n_devices": n_dev,
+        "fingerprint": _fingerprint(cfg, shape_name, multi_pod) + tag,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            "flops_body_once": cost.get("flops", 0.0),
+            "bytes_accessed_body_once": cost.get("bytes accessed", 0.0),
+        },
+        "hlo_terms": analysis.summarize(acc),
+        "roofline": terms,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": (mf / acc.flops) if acc.flops else None,
+        "hlo_chars": len(hlo),
+    }
+    return rec
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool, tag: str = "") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mesh = "multi" if multi_pod else "single"
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh}{suffix}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(configs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag for perf experiments")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. attn_block_skip=True)")
+    args = ap.parse_args()
+
+    over = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            over[k] = json.loads(v)
+        except json.JSONDecodeError:
+            over[k] = v
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(configs.SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if (args.both_meshes or args.all) else (args.multi_pod,)
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                path = cell_path(arch, shape_name, mp, args.tag)
+                cfgf = _fingerprint(configs.get_config(arch, **over),
+                                    shape_name, mp) + args.tag
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        old = json.load(f)
+                    if old.get("fingerprint") == cfgf or old.get("status") == "skipped":
+                        print(f"[cached] {arch} {shape_name} "
+                              f"{'multi' if mp else 'single'}")
+                        continue
+                label = f"{arch} {shape_name} {'multi' if mp else 'single'}"
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod=mp, over=over,
+                                   tag=args.tag)
+                except Exception as e:  # a cell failure is a bug: record it
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if mp else "single",
+                           "status": "failed", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"[ok] {label}: compile {rec['compile_s']}s "
+                          f"peak/dev {rec['memory']['peak_bytes_est']/2**30:.2f} GiB "
+                          f"compute {r['compute_s']*1e3:.1f}ms "
+                          f"mem {r['memory_s']*1e3:.1f}ms "
+                          f"coll {r['collective_s']*1e3:.1f}ms -> {r['bound']}")
+                elif rec["status"] == "skipped":
+                    print(f"[skip] {label}: {rec['reason']}")
+                else:
+                    print(f"[FAIL] {label}: {rec['error']}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function, not a module constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Topology (v5e-like, DESIGN.md §5):
+  single-pod: (16, 16)   axes ("data", "model")   = 256 chips
+  multi-pod:  (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+'model' is the ICI-contiguous TP axis; 'data' carries batch + FSDP;
+'pod' is pure DP across the inter-pod links (optionally FSDP too — ZeRO-3
+— for models whose optimizer state exceeds a single pod; see
+runtime/sharding.py fsdp_axes).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many (possibly fake) devices a test has."""
+    return jax.make_mesh(shape, axes)
+
+
+# Hardware constants for the roofline (TPU v5e-like, per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9            # B/s
+ICI_BW = 50e9             # B/s per link (~per-chip injection, one direction)
+HBM_PER_CHIP = 16 * 1024**3

@@ -1,0 +1,140 @@
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-cell HLO attribution profiler — the §Perf hillclimbing tool.
+
+Lowers one (arch x shape x mesh) cell exactly like the dry-run, then
+prints trip-count-aware attributions:
+
+  * FLOPs by op_name prefix (find replicated/unsharded compute),
+  * collective bytes by (kind, op_name) (find the dominant reductions),
+  * the while-loop tree with per-body local FLOPs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.profile --arch minicpm-2b \
+      --shape train_4k --set seq_parallel=true --layers 2 --top 15
+
+`--layers N` truncates the stack (keeping the superblock period) so the
+compile stays fast while per-layer structure is unchanged.
+"""
+
+import argparse  # noqa: E402
+import collections  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import analysis, steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def _walk(comps, fn):
+    def go(comp, mult):
+        sym = comp.sym()
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                bm = re.search(r"body=%([\w.\-]+)", ins.rest)
+                if bm and bm.group(1) in comps:
+                    go(comps[bm.group(1)],
+                       mult * analysis._trip_count(ins, comps))
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for cm in re.finditer(r"(?:to_apply|calls)=%([\w.\-]+)",
+                                      ins.rest):
+                    if cm.group(1) in comps:
+                        go(comps[cm.group(1)], mult)
+                continue
+            fn(ins, sym, mult)
+
+    go(comps["__entry__"], 1.0)
+
+
+def attribute(txt: str, depth: int = 6):
+    comps = analysis.parse_hlo(txt)
+    flops_by = collections.Counter()
+    coll_by = collections.Counter()
+    coll_n = collections.Counter()
+
+    def visit(ins, sym, mult):
+        m = re.search(r'op_name="([^"]*)"', ins.rest)
+        nm = "/".join((m.group(1) if m else "<no-op-name>").split("/")[1:depth])
+        if ins.opcode in ("dot", "convolution"):
+            flops_by[nm] += analysis._dot_flops(ins, sym) * mult
+        elif ins.opcode == "fusion":
+            cm = re.search(r"calls=%([\w.\-]+)", ins.rest)
+            if cm and cm.group(1) in comps:
+                f = analysis._fusion_flops(comps[cm.group(1)], comps)
+                if f:
+                    flops_by["F:" + nm] += f * mult
+        if ins.opcode in analysis.COLLECTIVES:
+            b = sum(analysis._shape_bytes(sym[o]) for o in ins.operands()
+                    if o in sym)
+            coll_by[(ins.opcode, nm)] += b * mult
+            coll_n[(ins.opcode, nm)] += mult
+
+    _walk(comps, visit)
+    return flops_by, coll_by, coll_n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", default="train_4k", choices=tuple(configs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="truncate the stack to N layers (period-aligned)")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    over = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            over[k] = json.loads(v)
+        except json.JSONDecodeError:
+            over[k] = v
+    cfg = configs.get_config(args.arch, **over)
+    if args.layers:
+        n = max(cfg.period, (args.layers // cfg.period) * cfg.period)
+        cfg = configs.get_config(args.arch, **over, n_layers=n)
+        print(f"(truncated to {n} layers)")
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    jf, largs, _ = steps.jitted_for_cell(cfg, mesh, args.shape)
+    with mesh:
+        compiled = jf.lower(*largs).compile()
+    txt = compiled.as_text()
+    if args.save_hlo:
+        with open(args.save_hlo, "w") as f:
+            f.write(txt)
+
+    flops_by, coll_by, coll_n = attribute(txt)
+    total = sum(flops_by.values())
+    print(f"\n== FLOPs by op_name (total {total/1e12:.2f} Tflop/device) ==")
+    for k, v in flops_by.most_common(args.top):
+        print(f"{v/1e12:10.2f} T  {100*v/total:5.1f}%  {k}")
+    ctot = sum(coll_by.values())
+    print(f"\n== collective bytes (total {ctot/2**30:.2f} GiB/device) ==")
+    for (op, nm), v in coll_by.most_common(args.top):
+        print(f"{v/2**30:9.2f} GiB x{coll_n[(op, nm)]:<7.0f} {op:18s} {nm}")
+
+    acc = analysis.analyze_hlo_text(txt)
+    cost = compiled.cost_analysis() or {}
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+    terms = analysis.roofline_terms(
+        acc, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW,
+        xla_flops_once=cost.get("flops", 0.0),
+        xla_bytes_once=cost.get("bytes accessed", 0.0))
+    print("\n== roofline terms ==")
+    for k, v in terms.items():
+        print(f"  {k}: {v if isinstance(v, str) else round(v, 4)}")
+
+
+if __name__ == "__main__":
+    main()

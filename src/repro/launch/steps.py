@@ -1,0 +1,169 @@
+"""Step functions (train / prefill / decode) + their sharding trees.
+
+These are the functions the dry-run lowers and the drivers execute —
+one source of truth so the compiled artifact analyzed in §Roofline is the
+artifact that would run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import api
+from repro.optim import adamw_init, adamw_update, cosine, wsd
+from repro.runtime import sharding as shr
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total: int = 10_000
+    schedule: str = "cosine"  # cosine | wsd (minicpm)
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    beta1: float = 0.9
+    beta2: float = 0.95
+
+
+def lr_at(hp: TrainHParams, step):
+    if hp.schedule == "wsd":
+        return wsd(step, peak_lr=hp.peak_lr, warmup=hp.warmup,
+                   stable=int(hp.total * 0.8), decay=int(hp.total * 0.1))
+    return cosine(step, peak_lr=hp.peak_lr, warmup=hp.warmup, total=hp.total)
+
+
+def make_train_step(cfg: ArchConfig, hp: Optional[TrainHParams] = None,
+                    mesh: Optional[Mesh] = None,
+                    dp: Tuple[str, ...] = ()) -> Callable:
+    hp = hp or TrainHParams(
+        schedule="wsd" if cfg.name.startswith("minicpm") else "cosine")
+    policy = cfg.policy()
+
+    def train_step(params, opt_state, batch):
+        with shr.activation_context(mesh, dp):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss_fn(cfg, p, batch))(params)
+            lr = lr_at(hp, opt_state["step"])
+            new_params, new_opt, metrics = adamw_update(
+                params, grads, opt_state, lr=lr, policy=policy,
+                beta1=hp.beta1, beta2=hp.beta2, weight_decay=hp.weight_decay,
+                clip_norm=hp.clip_norm,
+            )
+            return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                      dp: Tuple[str, ...] = ()) -> Callable:
+    def prefill_step(params, batch):
+        with shr.activation_context(mesh, dp):
+            logits, states, idx = api.prefill(cfg, params, batch)
+            return logits, states, idx
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                     dp: Tuple[str, ...] = ()) -> Callable:
+    def decode_step(params, states, cur_index, batch):
+        with shr.activation_context(mesh, dp):
+            return api.decode_step(cfg, params, states, cur_index, batch)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# sharding-annotated jit wrappers per (cfg, shape, mesh)
+# ---------------------------------------------------------------------------
+
+
+def opt_specs(cfg: ArchConfig):
+    pspecs = api.param_specs(cfg)
+    return jax.eval_shape(adamw_init, pspecs)
+
+
+def shardings_for(
+    cfg: ArchConfig, mesh: Mesh, shape_name: str
+) -> Dict[str, Any]:
+    sh = SHAPES[shape_name]
+    b = sh["global_batch"]
+    fsdp = (("pod", "data") if cfg.zero3_pods and "pod" in mesh.shape
+            else ("data",))
+    out: Dict[str, Any] = {}
+    pspecs = api.param_specs(cfg)
+    out["params"] = shr.tree_shardings(mesh, pspecs, fsdp_axes=fsdp)
+    out["batch"] = shr.batch_shardings(
+        mesh, cfg, api.batch_specs(cfg, shape_name), b)
+    if sh["kind"] == "train":
+        out["opt"] = shr.tree_shardings(mesh, opt_specs(cfg),
+                                        fsdp_axes=fsdp)
+    if sh["kind"] == "decode":
+        out["cache"] = shr.cache_shardings(
+            mesh, cfg, api.cache_specs(cfg, shape_name), b)
+    return out
+
+
+def jitted_for_cell(
+    cfg: ArchConfig, mesh: Mesh, shape_name: str,
+    hp: Optional[TrainHParams] = None,
+) -> Tuple[Callable, Tuple, Dict[str, Any]]:
+    """Returns (jitted_fn, lower_args_specs, shardings) for one cell."""
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    s = shardings_for(cfg, mesh, shape_name)
+    repl = NamedSharding(mesh, P())
+    batch_specs = api.batch_specs(cfg, shape_name)
+    dp = shr.dp_axes(mesh, sh["global_batch"])
+
+    if kind == "train":
+        fn = make_train_step(cfg, hp, mesh=mesh, dp=dp)
+        jf = jax.jit(
+            fn,
+            in_shardings=(s["params"], s["opt"], s["batch"]),
+            out_shardings=(s["params"], s["opt"],
+                           jax.tree.map(lambda _: repl,
+                                        {"loss": 0, "grad_norm": 0})),
+            donate_argnums=(0, 1),
+        )
+        args = (api.param_specs(cfg), opt_specs(cfg), batch_specs)
+        return jf, args, s
+
+    logits_sh = NamedSharding(
+        mesh,
+        shr.filter_pspec(
+            P(dp or None, None, "model"), mesh,
+            (sh["global_batch"], 1, cfg.vocab)),
+    )
+
+    if kind == "prefill":
+        fn = make_prefill_step(cfg, mesh=mesh, dp=dp)
+        # output states carry prefill-length caches: shapes via eval_shape
+        out_spec = jax.eval_shape(fn, api.param_specs(cfg), batch_specs)
+        states_sh = shr.cache_shardings(mesh, cfg, out_spec[1],
+                                        sh["global_batch"])
+        jf = jax.jit(
+            fn, in_shardings=(s["params"], s["batch"]),
+            out_shardings=(logits_sh, states_sh, repl),
+        )
+        return jf, (api.param_specs(cfg), batch_specs), s
+
+    # decode
+    fn = make_decode_step(cfg, mesh=mesh, dp=dp)
+    cache_specs = api.cache_specs(cfg, shape_name)
+    jf = jax.jit(
+        fn,
+        in_shardings=(s["params"], s["cache"], repl, s["batch"]),
+        out_shardings=(logits_sh, s["cache"]),
+        donate_argnums=(1,),
+    )
+    args = (api.param_specs(cfg), cache_specs,
+            jax.ShapeDtypeStruct((), jnp.int32), api.batch_specs(cfg, shape_name))
+    return jf, args, s

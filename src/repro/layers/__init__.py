@@ -1,0 +1,6 @@
+"""Policy-aware NN layers: pure ``init``/``apply`` functions on plain pytrees.
+
+Every division-shaped op inside these layers routes through the config's
+:class:`~repro.core.policy.NumericsPolicy`, which is how the paper's
+Goldschmidt datapath becomes a framework-wide feature (DESIGN.md §3).
+"""

@@ -1,0 +1,176 @@
+"""Mamba-1 (selective SSM) block — the attention-free mixer.
+
+Training/prefill uses a two-level scan (outer over sequence chunks, inner
+over steps) so the (b, s, d_inner, d_state) discretized tensors never
+materialize beyond one chunk — the same working-set-vs-serialization trade
+as the paper's feedback datapath, applied to recurrence (DESIGN.md §2).
+Decode is the O(1) single-step recurrence on carried (conv_state, ssm_state).
+
+The block is division-free internally (softplus/exp/silu); the policy's
+Goldschmidt sites around it are the pre-norm RMSNorm and the optimizer.
+The depthwise causal conv (k=4) is expressed as a sum of shifted scaled
+copies — no conv primitive, trivially shardable over channels.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import init as linit
+from repro.runtime.sharding import constrain
+
+
+def mamba_init(rng, d_model: int, d_inner: int, d_state: int, d_conv: int,
+               dt_rank: int):
+    r = jax.random.split(rng, 6)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba paper)
+    u = jax.random.uniform(r[4], (d_inner,), jnp.float32)
+    dt = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": linit.dense_init(r[0], d_model, (d_model, 2 * d_inner)),
+        "conv_w": linit.trunc_normal(r[1], (d_conv, d_inner), (d_conv) ** -0.5),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "x_proj": linit.dense_init(r[2], d_inner, (d_inner, dt_rank + 2 * d_state)),
+        "dt_w": linit.dense_init(r[3], dt_rank, (dt_rank, d_inner)),
+        "dt_b": dt_bias,
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                             (d_inner, d_state))
+        ),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": linit.dense_init(r[5], d_inner, (d_inner, d_model)),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b, conv_state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over seq.  x (b,s,di); conv_w (k,di).
+
+    conv_state (b, k-1, di) holds the tail of the previous segment (decode);
+    None means zero history (train).  Returns (y, new_state).
+    """
+    k = conv_w.shape[0]
+    b, s, di = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((b, k - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (b, s+k-1, di)
+    y = jnp.zeros_like(x)
+    for j in range(k):  # k = 4: four shifted scaled adds
+        y = y + xp[:, j : j + s, :] * conv_w[j].astype(x.dtype)
+    new_state = xp[:, s:, :] if k > 1 else conv_state
+    return y + conv_b.astype(x.dtype), new_state
+
+
+def _ssm_params(params, x1, dt_rank: int, d_state: int):
+    """x1 (b,s,di) -> dt (b,s,di), B (b,s,n), C (b,s,n) in fp32."""
+    proj = jnp.einsum(
+        "bsd,dr->bsr", x1.astype(jnp.float32), params["x_proj"].astype(jnp.float32)
+    )
+    dt_low = proj[..., :dt_rank]
+    B = proj[..., dt_rank : dt_rank + d_state]
+    C = proj[..., dt_rank + d_state :]
+    dt = jnp.einsum("bsr,rd->bsd", dt_low, params["dt_w"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + params["dt_b"])
+    return dt, B, C
+
+
+def _ssm_step(h, A, dt_t, B_t, C_t, x_t):
+    """One recurrence step.  h (b,di,n); dt_t/x_t (b,di); B_t/C_t (b,n)."""
+    dA = jnp.exp(dt_t[..., None] * A)  # (b, di, n)
+    dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]
+    h = h * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t)
+    return h, y
+
+
+def mamba_apply(
+    params,
+    x: jnp.ndarray,  # (b, s, d_model)
+    *,
+    d_inner: int,
+    d_state: int,
+    dt_rank: int,
+    chunk: int = 256,
+    conv_state: Optional[jnp.ndarray] = None,
+    ssm_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """Full-sequence (train/prefill) pass; optionally return final states."""
+    b, s, _ = x.shape
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    x1, z = xz[..., :d_inner], xz[..., d_inner:]
+    x1 = constrain(x1, "dp", None, "model")
+    x1, conv_new = _causal_conv(x1, params["conv_w"], params["conv_b"], conv_state)
+    x1 = jax.nn.silu(x1)
+    dt, B, C = _ssm_params(params, x1, dt_rank, d_state)
+    dt = constrain(dt, "dp", None, "model")
+    A = -jnp.exp(params["A_log"])  # (di, n)
+    x1f = constrain(x1.astype(jnp.float32), "dp", None, "model")
+
+    chunk = min(chunk, s)
+    while s % chunk:  # largest divisor of s <= requested chunk
+        chunk -= 1
+    n_chunks = s // chunk
+    h0 = (
+        ssm_state.astype(jnp.float32)
+        if ssm_state is not None
+        else jnp.zeros((b, d_inner, d_state), jnp.float32)
+    )
+    h0 = constrain(h0, "dp", "model", None)
+
+    def chunk_body(h, xs):
+        dt_c, B_c, C_c, x_c = xs  # (chunk, b, ...)
+
+        def step(h, ts):
+            dt_t, B_t, C_t, x_t = ts
+            h, y = _ssm_step(h, A, dt_t, B_t, C_t, x_t)
+            return h, y
+
+        h, ys = jax.lax.scan(step, h, (dt_c, B_c, C_c, x_c))
+        return h, ys
+
+    def to_chunks(a):  # (b, s, ...) -> (n_chunks, chunk, b, ...)
+        return jnp.moveaxis(a, 1, 0).reshape((n_chunks, chunk) + (a.shape[0],) + a.shape[2:])
+
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0, (to_chunks(dt), to_chunks(B), to_chunks(C), to_chunks(x1f))
+    )  # ys (n_chunks, chunk, b, di)
+    y = jnp.moveaxis(ys.reshape(s, b, d_inner), 0, 1)
+    y = y + params["D"] * x1f
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(dt_), params["out_proj"].astype(dt_))
+    if return_state:
+        return out, (conv_new, h_final)
+    return out
+
+
+def mamba_decode_step(
+    params,
+    x: jnp.ndarray,  # (b, 1, d_model)
+    conv_state: jnp.ndarray,  # (b, k-1, d_inner)
+    ssm_state: jnp.ndarray,  # (b, d_inner, d_state)
+    *,
+    d_inner: int,
+    d_state: int,
+    dt_rank: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) decode: returns (out (b,1,d), conv_state', ssm_state')."""
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    x1, z = xz[..., :d_inner], xz[..., d_inner:]
+    x1, conv_new = _causal_conv(x1, params["conv_w"], params["conv_b"], conv_state)
+    x1 = jax.nn.silu(x1)
+    dt, B, C = _ssm_params(params, x1, dt_rank, d_state)
+    A = -jnp.exp(params["A_log"])
+    h, y = _ssm_step(
+        ssm_state.astype(jnp.float32), A, dt[:, 0], B[:, 0], C[:, 0],
+        x1[:, 0].astype(jnp.float32),
+    )
+    y = y + params["D"] * x1[:, 0].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = jnp.einsum("bd,de->be", y.astype(dt_), params["out_proj"].astype(dt_))
+    return out[:, None, :], conv_new, h

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN: GShard-style einsum dispatch with capacity.
+
+Division sites: the router softmax and the top-k weight renormalization
+both route through the policy (Goldschmidt under ``gs_*`` modes).
+
+Memory discipline (DESIGN.md §8): the (groups, group, E, C) dispatch
+one-hot is the memory hazard of einsum-MoE; we bound it by scanning over
+chunks of ``moe_chunk_groups`` groups — one reused dispatch datapath
+instead of one materialized per group, the paper's feedback idea applied a
+third time (kernel loop, layer scan, and here).
+
+Sharding: expert-stacked weights (E, ...) are sharded over the 'model'
+mesh axis (EP); tokens stay sharded over 'data'; the dispatch/combine
+einsums carry the token->expert resharding (GSPMD inserts the all-to-all /
+all-gather — visible in the dry-run HLO, counted in the collective term).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import NumericsPolicy
+from repro.layers import init as linit
+from repro.runtime.sharding import constrain
+
+
+def moe_init(rng, d_model: int, d_ff: int, n_experts: int, act: str = "silu"):
+    r = jax.random.split(rng, 4)
+    p = {
+        "router": linit.dense_init(r[0], d_model, (d_model, n_experts)),
+        "w_in": linit.dense_init(r[1], d_model, (n_experts, d_model, d_ff)),
+        "w_out": linit.dense_init(r[2], d_ff, (n_experts, d_ff, d_model)),
+    }
+    if act == "silu":
+        p["w_gate"] = linit.dense_init(r[3], d_model, (n_experts, d_model, d_ff))
+    return p
+
+
+def capacity(group: int, n_experts: int, top_k: int, cf: float) -> int:
+    c = int(-(-group * top_k * cf // n_experts))
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_apply(
+    params,
+    x: jnp.ndarray,  # (b, s, d)
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float,
+    group_size: int,
+    chunk_groups: int,
+    policy: NumericsPolicy,
+    act: str = "silu",
+) -> jnp.ndarray:
+    b, s, d = x.shape
+    dt = x.dtype
+    T = b * s
+    g = min(group_size, T)
+    flat = x.reshape(T, d)
+    # pad tokens to a multiple of g * chunk_groups
+    n_grp = -(-T // g)
+    chunk_groups = min(chunk_groups, n_grp)
+    n_grp_pad = -(-n_grp // chunk_groups) * chunk_groups
+    T_pad = n_grp_pad * g
+    if T_pad != T:
+        flat = jnp.pad(flat, ((0, T_pad - T), (0, 0)))
+    grouped = flat.reshape(n_grp_pad // chunk_groups, chunk_groups, g, d)
+    C = capacity(g, n_experts, top_k, capacity_factor)
+
+    router = params["router"].astype(jnp.float32)
+    w_in = params["w_in"].astype(dt)
+    w_out = params["w_out"].astype(dt)
+    w_gate = params.get("w_gate")
+    if w_gate is not None:
+        w_gate = w_gate.astype(dt)
+
+    def chunk_body(_, xc):  # xc (chunk_groups, g, d)
+        logits = jnp.einsum("Ggd,de->Gge", xc.astype(jnp.float32), router)
+        probs = policy.softmax(logits, axis=-1)  # router softmax (site #4a)
+        top_vals, top_idx = jax.lax.top_k(probs, top_k)  # (G, g, k)
+        denom = jnp.sum(top_vals, axis=-1, keepdims=True)
+        top_vals = top_vals * policy.reciprocal(denom)  # renorm (site #4b)
+        oh = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32)  # (G,g,k,E)
+        # position of each (token, slot) within its expert, priority by
+        # (slot-major, token) order — GShard convention.
+        ohk = oh.transpose(0, 2, 1, 3)  # (G, k, g, E)
+        flatk = ohk.reshape(oh.shape[0], top_k * g, n_experts)
+        pos = jnp.cumsum(flatk, axis=1) - flatk  # count of earlier uses
+        pos = pos.reshape(oh.shape[0], top_k, g, n_experts).transpose(0, 2, 1, 3)
+        pos_tok = jnp.sum(pos * oh, axis=-1)  # (G, g, k) slot index
+        keep = pos_tok < C
+        gates = top_vals * keep  # dropped tokens contribute 0
+        pos_oh = jax.nn.one_hot(pos_tok, C, dtype=jnp.float32)  # (G,g,k,C)
+        # combine (G,g,E,C) = sum_k gates * oh_E * oh_C
+        combine = jnp.einsum("Ggk,GgkE,GgkC->GgEC", gates, oh, pos_oh)
+        dispatch = (combine > 0.0).astype(dt)
+        xe = jnp.einsum("GgEC,Ggd->EGCd", dispatch, xc)  # -> expert major
+        xe = constrain(xe, "model", "dp", None, None)  # the all-to-all edge
+        h = jnp.einsum("EGCd,Edf->EGCf", xe, w_in)
+        if w_gate is not None:
+            gate = jnp.einsum("EGCd,Edf->EGCf", xe, w_gate)
+            h = jax.nn.silu(gate) * h
+        else:
+            h = jax.nn.gelu(h)
+        h = constrain(h, "model", "dp", None, None)
+        ye = jnp.einsum("EGCf,Efd->EGCd", h, w_out)
+        ye = constrain(ye, "model", "dp", None, None)
+        # combine in activation dtype with fp32 accumulation: an all-f32
+        # combine here was observed to drag every expert dgrad dot to f32
+        # (2x traffic, off the bf16 MXU path) — §Perf B3.
+        y = jnp.einsum("GgEC,EGCd->Ggd", combine.astype(dt), ye,
+                       preferred_element_type=jnp.float32)
+        return None, constrain(y.astype(dt), "dp", None, None)
+
+    _, ys = jax.lax.scan(chunk_body, None, grouped)
+    out = ys.reshape(T_pad, d)[:T].reshape(b, s, d)
+    return out

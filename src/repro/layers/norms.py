@@ -1,0 +1,56 @@
+"""RMSNorm / LayerNorm with Goldschmidt rsqrt (division site #2).
+
+fp32 statistics regardless of activation dtype.  The mean is a multiply by
+the compile-time constant 1/d (no runtime divide); the rsqrt is the
+policy's — i.e. [4]'s coupled Goldschmidt iteration under ``gs_*`` modes.
+``kernel_impl='pallas'`` routes RMSNorm through the fused Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.policy import NumericsPolicy
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, *, eps: float, policy: NumericsPolicy,
+            kernel_impl: str = "jnp"):
+    if kernel_impl == "pallas":
+        from repro.kernels import ops
+
+        return ops.gs_rmsnorm(
+            x, params["scale"], eps=eps, variant=policy.variant,
+            interpret=ops.interpret_default(),
+        )
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * policy.rsqrt(ms + eps) * params["scale"]).astype(x.dtype)
+
+
+def layernorm(params, x, *, eps: float, policy: NumericsPolicy,
+              kernel_impl: str = "jnp"):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    xc = x32 - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    return (xc * policy.rsqrt(var + eps) * params["scale"] + params["bias"]).astype(
+        x.dtype
+    )
+
+
+def norm_init(kind: str, d: int):
+    return layernorm_init(d) if kind == "layernorm" else rmsnorm_init(d)
+
+
+def norm_apply(kind: str, params, x, *, eps, policy, kernel_impl="jnp"):
+    if kind == "layernorm":
+        return layernorm(params, x, eps=eps, policy=policy, kernel_impl=kernel_impl)
+    return rmsnorm(params, x, eps=eps, policy=policy, kernel_impl=kernel_impl)

@@ -1,0 +1,1 @@
+"""Model backbones: decoder-only LM (dense/MoE/SSM/hybrid/VLM) and enc-dec."""

@@ -1,0 +1,129 @@
+"""Unified model facade + ShapeDtypeStruct input specs for every cell.
+
+``input_specs(cfg, shape_name)`` returns weak-type-correct stand-ins for
+every model input of that (arch x shape) cell — the dry-run lowers against
+these without allocating anything (the shannon/kernels pattern).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import encdec, transformer
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.family == "encdec"
+
+
+def init(cfg: ArchConfig, rng):
+    return encdec.init(cfg, rng) if is_encdec(cfg) else transformer.init(cfg, rng)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    if is_encdec(cfg):
+        return encdec.loss_fn(cfg, params, batch)
+    return transformer.loss_fn(cfg, params, batch)
+
+
+def forward(cfg: ArchConfig, params, batch):
+    if is_encdec(cfg):
+        return encdec.forward(cfg, params, batch["tokens"], batch["frames"])
+    return transformer.forward(cfg, params, batch["tokens"], batch.get("pos_ids"))
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    if is_encdec(cfg):
+        return encdec.prefill(cfg, params, batch["tokens"], batch["frames"])
+    return transformer.prefill(cfg, params, batch["tokens"], batch.get("pos_ids"))
+
+
+def decode_step(cfg: ArchConfig, params, states, cur_index, batch):
+    if is_encdec(cfg):
+        return encdec.decode_step(cfg, params, states, cur_index, batch["token"])
+    return transformer.decode_step(cfg, params, states, cur_index, batch["token"],
+                                   batch.get("pos_ids"))
+
+
+def make_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    if is_encdec(cfg):
+        return encdec.make_cache(cfg, batch, s_max, dtype)
+    return transformer.make_cache(cfg, batch, s_max, dtype)
+
+
+# ---------------------------------------------------------------------------
+# specs (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the data batch of this cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    act = jnp.dtype(cfg.dtype)
+    if kind == "train":
+        specs: Dict[str, Any] = {"tokens": _i32((b, s)), "labels": _i32((b, s))}
+        if cfg.pos == "mrope":
+            specs["pos_ids"] = _i32((3, b, s))
+        if is_encdec(cfg):
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), act)
+        return specs
+    if kind == "prefill":
+        specs = {"tokens": _i32((b, s))}
+        if cfg.pos == "mrope":
+            specs["pos_ids"] = _i32((3, b, s))
+        if is_encdec(cfg):
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), act)
+        return specs
+    # decode: one new token against an s-slot cache
+    specs = {"token": _i32((b, 1))}
+    if cfg.pos == "mrope":
+        specs["pos_ids"] = _i32((3, b, 1))
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str):
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    return jax.eval_shape(
+        lambda: make_cache(cfg, b, s, jnp.dtype(cfg.dtype))
+    )
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    import math
+
+    specs = param_specs(cfg)
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(specs))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts expert params)."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    import math
+
+    specs = param_specs(cfg)
+    expert, routed = 0, 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        keys = "/".join(str(k) for k in path)
+        if "moe" in keys and "router" not in keys:
+            n = math.prod(leaf.shape)
+            expert += n
+            routed += (n // cfg.n_experts) * cfg.top_k
+    return total - expert + routed

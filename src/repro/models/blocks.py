@@ -1,0 +1,161 @@
+"""One residual block = (norm -> mixer -> +res) [-> norm -> ffn -> +res].
+
+``kind = (mixer, ffn)`` with mixer in {attn, mamba} and ffn in
+{mlp, moe, none}; the per-arch pattern comes from ``ArchConfig.block_kinds``.
+All blocks run in one of three modes:
+
+  train   — full sequence, no state I/O
+  prefill — full sequence, emits decode state (KV cache / SSM state)
+  decode  — one token, consumes + emits state
+
+The state pytree leaves carry NO group axis here; the model stacks them.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers import attention as attn
+from repro.layers import mamba as mb
+from repro.layers import mlp as mlp_mod
+from repro.layers import moe as moe_mod
+from repro.layers.norms import norm_apply, norm_init
+from repro.layers.rope import apply_rope
+from repro.runtime.sharding import constrain
+
+
+def block_init(rng, cfg: ArchConfig, kind: Tuple[str, str]) -> Dict[str, Any]:
+    mixer, ffn = kind
+    r = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.norm, cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = attn.attn_init(
+            r[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        )
+    else:
+        p["mamba"] = mb.mamba_init(
+            r[0], cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv, cfg.dt_rank_
+        )
+    if ffn != "none":
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model)
+        if ffn == "moe":
+            p["moe"] = moe_mod.moe_init(r[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                        cfg.act)
+        else:
+            p["mlp"] = mlp_mod.mlp_init(r[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def init_block_state(cfg: ArchConfig, kind: Tuple[str, str], batch: int,
+                     s_max: int, dtype) -> Dict[str, jnp.ndarray]:
+    """Zeroed decode state for one layer of this kind."""
+    mixer, _ = kind
+    if mixer == "attn":
+        shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim_)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def _residual(cfg: ArchConfig, x, out):
+    if cfg.scale_depth:
+        out = out * (cfg.scale_depth / (cfg.n_layers ** 0.5))
+    return x + out.astype(x.dtype)
+
+
+def block_apply(
+    cfg: ArchConfig,
+    kind: Tuple[str, str],
+    params: Dict[str, Any],
+    x: jnp.ndarray,  # (b, s, d)
+    *,
+    mode: str,  # train | prefill | decode
+    rope_cs: Optional[Tuple[jnp.ndarray, jnp.ndarray]],  # cos/sin (b,s,hd/2)
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+    cur_index: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    mixer, ffn = kind
+    policy = cfg.policy()
+    # full sequence parallelism: seq dim of the residual stream (and of
+    # q/k/v) sharded over 'model'; otherwise heads carry the TP axis.
+    sp = cfg.seq_parallel and mode != "decode"
+    s_ax = "model" if sp else None
+    h_ax = None if sp else "model"
+    h = norm_apply(cfg.norm, params["norm1"], x, eps=cfg.norm_eps, policy=policy,
+                   kernel_impl=cfg.kernel_impl)
+    new_state: Optional[Dict[str, jnp.ndarray]] = None
+
+    if mixer == "attn":
+        q, k, v = attn.qkv(params["attn"], h)
+        q = constrain(q, "dp", s_ax, h_ax, None)
+        k = constrain(k, "dp", s_ax, None, None)
+        v = constrain(v, "dp", s_ax, None, None)
+        if rope_cs is not None:
+            cos, sin = rope_cs
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        if mode == "decode":
+            assert state is not None and cur_index is not None
+            kc, vc = attn.cache_update(state["k"], state["v"], k, v, cur_index)
+            o = attn.decode_attention(q, kc, vc, cur_index, policy=policy)
+            new_state = {"k": kc, "v": vc}
+        else:
+            if cfg.kernel_impl == "pallas":
+                from repro.kernels import ops
+
+                o = ops.flash_attention(
+                    q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), causal=True,
+                    variant=policy.variant, interpret=ops.interpret_default(),
+                ).transpose(0, 2, 1, 3)
+            else:
+                o = attn.flash_chunked(
+                    q, k, v, policy=policy, causal=True,
+                    q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+                    block_skip=cfg.attn_block_skip,
+                    seq_shard=cfg.attn_seq_shard,
+                )
+            if mode == "prefill":
+                new_state = {"k": k, "v": v}
+        out = attn.out_proj(params["attn"], o)
+    else:  # mamba
+        if mode == "decode":
+            assert state is not None
+            out, conv_s, ssm_s = mb.mamba_decode_step(
+                params["mamba"], h, state["conv"], state["ssm"],
+                d_inner=cfg.d_inner, d_state=cfg.ssm_state, dt_rank=cfg.dt_rank_,
+            )
+            new_state = {"conv": conv_s, "ssm": ssm_s}
+        elif mode == "prefill":
+            out, (conv_s, ssm_s) = mb.mamba_apply(
+                params["mamba"], h, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+                dt_rank=cfg.dt_rank_, chunk=cfg.mamba_chunk, return_state=True,
+            )
+            new_state = {"conv": conv_s, "ssm": ssm_s}
+        else:
+            out = mb.mamba_apply(
+                params["mamba"], h, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+                dt_rank=cfg.dt_rank_, chunk=cfg.mamba_chunk,
+            )
+    x = constrain(_residual(cfg, x, out), "dp", s_ax, None)
+
+    if ffn != "none":
+        h = norm_apply(cfg.norm, params["norm2"], x, eps=cfg.norm_eps,
+                       policy=policy, kernel_impl=cfg.kernel_impl)
+        if ffn == "moe":
+            out = moe_mod.moe_apply(
+                params["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                group_size=cfg.moe_group_size,
+                chunk_groups=cfg.moe_chunk_groups, policy=policy, act=cfg.act,
+            )
+        else:
+            out = mlp_mod.mlp_apply(params["mlp"], h, act=cfg.act)
+        x = constrain(_residual(cfg, x, out), "dp", s_ax, None)
+    return x, new_state

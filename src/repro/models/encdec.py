@@ -1,0 +1,201 @@
+"""Encoder-decoder backbone (Whisper-style) with the stub audio frontend.
+
+Per the assignment, the conv frontend is a STUB: ``input_specs`` feeds
+precomputed (b, enc_seq, d_model) frame embeddings.  Everything else is
+real: sinusoidal encoder positions, non-causal encoder self-attention,
+causal decoder self-attention with KV cache, per-layer cross-attention
+over the encoder output (cross-KV cached at prefill), learned decoder
+positions, LayerNorm (Goldschmidt rsqrt on the variance), tied unembed.
+
+Both stacks scan over layers like the decoder-only model.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers import attention as attn
+from repro.layers import init as linit
+from repro.layers import mlp as mlp_mod
+from repro.layers.norms import norm_apply, norm_init
+
+Params = Dict[str, Any]
+
+
+def _sinusoid(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / (d // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_init(rng, cfg: ArchConfig):
+    r = jax.random.split(rng, 2)
+    return {
+        "norm1": norm_init(cfg.norm, cfg.d_model),
+        "attn": attn.attn_init(r[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim_),
+        "norm2": norm_init(cfg.norm, cfg.d_model),
+        "mlp": mlp_mod.mlp_init(r[1], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_layer_init(rng, cfg: ArchConfig):
+    r = jax.random.split(rng, 3)
+    return {
+        "norm1": norm_init(cfg.norm, cfg.d_model),
+        "self_attn": attn.attn_init(r[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim_),
+        "norm2": norm_init(cfg.norm, cfg.d_model),
+        "cross_attn": attn.attn_init(r[1], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim_),
+        "norm3": norm_init(cfg.norm, cfg.d_model),
+        "mlp": mlp_mod.mlp_init(r[2], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def init(cfg: ArchConfig, rng) -> Params:
+    r = jax.random.split(rng, 5)
+    return {
+        "embed": linit.trunc_normal(r[0], (cfg.vocab, cfg.d_model), 0.02),
+        "pos_embed": linit.trunc_normal(r[1], (cfg.max_seq, cfg.d_model), 0.02),
+        "enc_layers": linit.stacked(
+            r[2], cfg.n_enc_layers, lambda rr: _enc_layer_init(rr, cfg)
+        ),
+        "dec_layers": linit.stacked(
+            r[3], cfg.n_layers, lambda rr: _dec_layer_init(rr, cfg)
+        ),
+        "enc_final_norm": norm_init(cfg.norm, cfg.d_model),
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+    }
+
+
+def encode(cfg: ArchConfig, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames (b, enc_seq, d_model) -> encoder output, same shape."""
+    policy = cfg.policy()
+    x = (frames + _sinusoid(frames.shape[1], cfg.d_model)[None]).astype(cfg.dtype)
+
+    def body(x, lp):
+        h = norm_apply(cfg.norm, lp["norm1"], x, eps=cfg.norm_eps, policy=policy)
+        q, k, v = attn.qkv(lp["attn"], h)
+        o = attn.flash_chunked(q, k, v, policy=policy, causal=False,
+                               q_block=cfg.attn_q_block,
+                               kv_block=cfg.attn_kv_block,
+                               seq_shard=cfg.attn_seq_shard)
+        x = x + attn.out_proj(lp["attn"], o)
+        h = norm_apply(cfg.norm, lp["norm2"], x, eps=cfg.norm_eps, policy=policy)
+        x = x + mlp_mod.mlp_apply(lp["mlp"], h, act=cfg.act)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return norm_apply(cfg.norm, params["enc_final_norm"], x, eps=cfg.norm_eps,
+                      policy=policy)
+
+
+def _dec_stack(cfg: ArchConfig, params: Params, x, enc_out, *, mode: str,
+               states=None, cur_index=None):
+    policy = cfg.policy()
+    has_state = mode in ("prefill", "decode")
+
+    def body(x, group):
+        lp, st = group
+        h = norm_apply(cfg.norm, lp["norm1"], x, eps=cfg.norm_eps, policy=policy)
+        q, k, v = attn.qkv(lp["self_attn"], h)
+        new_st = {} if has_state else None
+        if mode == "decode":
+            kc, vc = attn.cache_update(st["k"], st["v"], k, v, cur_index)
+            o = attn.decode_attention(q, kc, vc, cur_index, policy=policy)
+            new_st = {"k": kc, "v": vc, "ck": st["ck"], "cv": st["cv"]}
+            ck, cv = st["ck"], st["cv"]
+        else:
+            o = attn.flash_chunked(q, k, v, policy=policy, causal=True,
+                                   q_block=cfg.attn_q_block,
+                                   kv_block=cfg.attn_kv_block,
+                                   seq_shard=cfg.attn_seq_shard)
+            if mode == "prefill":
+                new_st = {"k": k, "v": v}
+        x = x + attn.out_proj(lp["self_attn"], o)
+        h = norm_apply(cfg.norm, lp["norm2"], x, eps=cfg.norm_eps, policy=policy)
+        cq = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(h.dtype))
+        if mode != "decode":
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out,
+                            lp["cross_attn"]["wk"].astype(h.dtype))
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                            lp["cross_attn"]["wv"].astype(h.dtype))
+            if mode == "prefill":
+                new_st["ck"], new_st["cv"] = ck, cv
+        if mode == "decode":
+            o = attn.attention_dense(cq, ck, cv, policy=policy, causal=False)
+        else:
+            o = attn.flash_chunked(cq, ck, cv, policy=policy, causal=False,
+                                   q_block=cfg.attn_q_block,
+                                   kv_block=cfg.attn_kv_block,
+                                   seq_shard=cfg.attn_seq_shard)
+        x = x + attn.out_proj(lp["cross_attn"], o)
+        h = norm_apply(cfg.norm, lp["norm3"], x, eps=cfg.norm_eps, policy=policy)
+        x = x + mlp_mod.mlp_apply(lp["mlp"], h, act=cfg.act)
+        return x, new_st
+
+    xs = (params["dec_layers"], states if mode == "decode" else None)
+    fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+    x, new_states = jax.lax.scan(fn, x, xs)
+    return x, (new_states if has_state else None)
+
+
+def _embed_dec(cfg, params, tokens, cur_index=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cur_index is not None:
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], cur_index,
+                                          tokens.shape[1], axis=0)
+    else:
+        pe = params["pos_embed"][: tokens.shape[1]]
+    return x + pe[None].astype(cfg.dtype)
+
+
+def _unembed(cfg, params, x):
+    h = norm_apply(cfg.norm, params["final_norm"], x, eps=cfg.norm_eps,
+                   policy=cfg.policy())
+    return jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            frames: jnp.ndarray) -> jnp.ndarray:
+    enc_out = encode(cfg, params, frames)
+    x = _embed_dec(cfg, params, tokens)
+    x, _ = _dec_stack(cfg, params, x, enc_out, mode="train")
+    return _unembed(cfg, params, x)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch) -> jnp.ndarray:
+    from repro.models.transformer import cross_entropy
+
+    logits = forward(cfg, params, batch["tokens"], batch["frames"])
+    return cross_entropy(logits, batch["labels"])
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            frames: jnp.ndarray):
+    enc_out = encode(cfg, params, frames)
+    x = _embed_dec(cfg, params, tokens)
+    x, states = _dec_stack(cfg, params, x, enc_out, mode="prefill")
+    return _unembed(cfg, params, x[:, -1:, :]), states, jnp.int32(tokens.shape[1])
+
+
+def decode_step(cfg: ArchConfig, params: Params, states, cur_index, token):
+    x = _embed_dec(cfg, params, token, cur_index=cur_index)
+    x, new_states = _dec_stack(cfg, params, x, None, mode="decode",
+                               states=states, cur_index=cur_index)
+    return _unembed(cfg, params, x), new_states
+
+
+def make_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    kv = lambda s: jnp.zeros((cfg.n_layers, batch, s, cfg.n_kv_heads,
+                              cfg.head_dim_), dtype)
+    return {"k": kv(s_max), "v": kv(s_max), "ck": kv(cfg.enc_seq),
+            "cv": kv(cfg.enc_seq)}

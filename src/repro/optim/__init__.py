@@ -1,0 +1,5 @@
+"""Optimizer substrate: AdamW (Goldschmidt denominators), schedules,
+global-norm clipping, error-feedback gradient compression."""
+
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import cosine, wsd  # noqa: F401

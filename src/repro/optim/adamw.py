@@ -1,0 +1,90 @@
+"""AdamW on plain pytrees, with the paper's Goldschmidt denominator.
+
+The update ``m_hat / (sqrt(v_hat) + eps)`` is division site #5 (DESIGN.md
+§3): under ``gs_*`` policies both the sqrt and the reciprocal run the
+paper's datapath (one fused Goldschmidt pass per parameter element — the
+Pallas kernel ``gs_adam`` is the TPU-fused form of exactly this function
+and is tested against it).
+
+Optimizer state is fp32 regardless of parameter dtype; global-norm
+clipping also routes its sqrt/divide through the policy.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import NumericsPolicy
+
+OptState = Dict[str, Any]
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jax.tree.map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), p
+    )
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree, policy: NumericsPolicy) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return policy.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float, policy: NumericsPolicy):
+    norm = global_norm(grads, policy)
+    scale = jnp.minimum(1.0, max_norm * policy.reciprocal(norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    params,
+    grads,
+    state: OptState,
+    *,
+    lr: jnp.ndarray,
+    policy: NumericsPolicy,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    stepf = step.astype(jnp.float32)
+    if clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, clip_norm, policy)
+    else:
+        gnorm = global_norm(grads, policy)
+    bc1 = 1.0 - beta1 ** stepf
+    bc2 = 1.0 - beta2 ** stepf
+    inv_bc1 = policy.reciprocal(bc1)
+    inv_bc2 = policy.reciprocal(bc2)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = beta1 * m + (1.0 - beta1) * g32
+        v_new = beta2 * v + (1.0 - beta2) * g32 * g32
+        denom = policy.sqrt(v_new * inv_bc2) + eps
+        update = (m_new * inv_bc1) * policy.reciprocal(denom)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,25 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int,
+           min_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, stable: int, decay: int,
+        min_ratio: float = 0.01):
+    """Warmup -> stable plateau -> (exponential-ish) decay.  MiniCPM §4."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    in_decay = jnp.clip((s - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    dec = min_ratio ** in_decay  # exp decay from 1 -> min_ratio
+    lr = jnp.where(s < warmup, warm, jnp.where(s < warmup + stable, 1.0, dec))
+    return peak_lr * lr

@@ -1,0 +1,1 @@
+"""Distributed runtime: sharding rules, fault tolerance, elasticity."""

@@ -1,0 +1,132 @@
+"""Fault-tolerant training driver.
+
+The loop a real cluster job runs (DESIGN.md §5):
+
+    restore-or-init -> [step; observe clock; periodic async checkpoint]
+    on ChipFailure      -> restore latest checkpoint, rebuild step fn, resume
+    on straggler alarm  -> elastic re-mesh (possibly fewer hosts), restore
+                           the mesh-agnostic checkpoint onto the new mesh
+
+Because the data pipeline is addressed by global step (data/synthetic.py)
+and checkpoints are mesh-agnostic logical arrays (checkpoint/store.py),
+both recovery paths resume bit-exactly on the step after the last
+checkpoint — asserted in tests/test_fault_tolerance.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.failures import (ChipFailure, FailureInjector,
+                                    StragglerClock, StragglerDetector)
+
+log = logging.getLogger("repro.driver")
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 2
+    max_restarts: int = 8
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def run_training(
+    *,
+    cfg: DriverConfig,
+    init_state: Callable[[], TrainState],
+    make_step_fn: Callable[[], Callable],  # rebuilt after failures (recompile)
+    make_batch: Callable[[int], Any],
+    fingerprint: str = "",
+    injector: Optional[FailureInjector] = None,
+    clock: Optional[StragglerClock] = None,
+    on_remesh: Optional[Callable[[], None]] = None,
+    state_shardings: Optional[Any] = None,
+    log_every: int = 10,
+) -> Dict[str, Any]:
+    """Run to total_steps surviving injected failures.  Returns stats."""
+    mgr = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep,
+                            fingerprint=fingerprint)
+    detector = StragglerDetector()
+    restarts = 0
+    remeshes = 0
+    losses: Dict[int, float] = {}
+
+    state = init_state()
+    restored, manifest = mgr.restore_latest(
+        {"params": state.params, "opt_state": state.opt_state},
+        shardings=state_shardings,
+    )
+    if restored is not None:
+        state = TrainState(restored["params"], restored["opt_state"],
+                           int(manifest["step"]))
+        log.info("restored checkpoint at step %d", state.step)
+
+    step_fn = make_step_fn()
+    while state.step < cfg.total_steps:
+        try:
+            step = state.step
+            t0 = time.monotonic()
+            if injector is not None:
+                injector.check(step)
+            batch = make_batch(step)
+            params, opt_state, metrics = step_fn(state.params,
+                                                 state.opt_state, batch)
+            state = TrainState(params, opt_state, step + 1)
+            dt = (clock.sample(step) if clock is not None
+                  else time.monotonic() - t0)
+            losses[step] = float(metrics["loss"])
+            if log_every and step % log_every == 0:
+                log.info("step %d loss %.4f (%.3fs)", step, losses[step], dt)
+            if detector.observe(dt):
+                log.warning("straggler detected at step %d -> elastic re-mesh",
+                            step)
+                remeshes += 1
+                detector = StragglerDetector()
+                if clock is not None:
+                    clock.slow_from = None  # the slow host left the job
+                mgr.save(state.step, {"params": state.params,
+                                      "opt_state": state.opt_state},
+                         blocking=True)
+                if on_remesh is not None:
+                    on_remesh()
+                step_fn = make_step_fn()
+            elif state.step % cfg.checkpoint_every == 0:
+                mgr.save(state.step, {"params": state.params,
+                                      "opt_state": state.opt_state})
+        except ChipFailure as e:
+            restarts += 1
+            log.warning("%s -> restart %d", e, restarts)
+            if restarts > cfg.max_restarts:
+                raise
+            fresh = init_state()
+            restored, manifest = mgr.restore_latest(
+                {"params": fresh.params, "opt_state": fresh.opt_state},
+                shardings=state_shardings,
+            )
+            if restored is None:
+                state = fresh
+            else:
+                state = TrainState(restored["params"], restored["opt_state"],
+                                   int(manifest["step"]))
+            step_fn = make_step_fn()
+
+    mgr.save(state.step, {"params": state.params, "opt_state": state.opt_state},
+             blocking=True)
+    mgr.wait()
+    return {"state": state, "losses": losses, "restarts": restarts,
+            "remeshes": remeshes}

@@ -1,0 +1,11 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — tests see ONE CPU device by
+design; multi-device semantics are exercised via subprocesses
+(test_multidevice.py) and the dry-run launcher."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,108 @@
+"""Driver-level fault tolerance: restart-exactness and straggler re-mesh."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint.store import config_fingerprint
+from repro.data.synthetic import SyntheticLM
+from repro.launch.steps import TrainHParams, make_train_step
+from repro.models import api
+from repro.optim import adamw_init
+from repro.runtime.driver import DriverConfig, TrainState, run_training
+from repro.runtime.failures import (FailureInjector, StragglerClock,
+                                    StragglerDetector)
+
+
+def _run(tmp_path, steps=12, fail_at=(), straggle_from=None, seed=0):
+    cfg = configs.get_smoke("tinyllama-1.1b")
+    hp = TrainHParams(peak_lr=1e-3, warmup=2, total=steps)
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=seed)
+
+    def init_state():
+        params = api.init(cfg, jax.random.key(seed))
+        return TrainState(params, adamw_init(params), 0)
+
+    def make_step_fn():
+        return jax.jit(make_train_step(cfg, hp))
+
+    def make_batch(step):
+        return {k: jnp.asarray(v) for k, v in ds.global_batch_np(step).items()}
+
+    return run_training(
+        cfg=DriverConfig(total_steps=steps, checkpoint_every=4,
+                         checkpoint_dir=str(tmp_path)),
+        init_state=init_state, make_step_fn=make_step_fn,
+        make_batch=make_batch, fingerprint=config_fingerprint(cfg),
+        injector=FailureInjector(fail_at_steps=tuple(fail_at)),
+        clock=(StragglerClock(slow_from=straggle_from)
+               if straggle_from is not None else None),
+        log_every=0,
+    )
+
+
+class TestRestartExactness:
+    def test_failure_recovery_reproduces_loss_curve(self, tmp_path):
+        clean = _run(tmp_path / "clean", steps=12)
+        failed = _run(tmp_path / "failed", steps=12, fail_at=(6, 9))
+        assert failed["restarts"] == 2
+        # every step's loss identical to the uninterrupted run: the restart
+        # resumed from the checkpoint and replayed the same step-addressed
+        # data through the same state
+        for s in clean["losses"]:
+            assert abs(clean["losses"][s] - failed["losses"][s]) < 1e-6, s
+
+    def test_exhausted_restarts_raise(self, tmp_path):
+        import pytest
+
+        from repro.runtime.failures import ChipFailure
+
+        with pytest.raises(ChipFailure):
+            # 12 distinct failing steps > max_restarts (8) -> gives up
+            _run(tmp_path, steps=12, fail_at=tuple(range(100)))
+
+
+class TestStraggler:
+    def test_detector_fires_on_persistent_outlier(self):
+        det = StragglerDetector(threshold=2.0, patience=3)
+        for _ in range(10):
+            assert not det.observe(1.0)
+        fired = [det.observe(5.0) for _ in range(3)]
+        assert fired == [False, False, True]
+
+    def test_detector_ignores_single_spike(self):
+        det = StragglerDetector(threshold=2.0, patience=3)
+        for _ in range(5):
+            det.observe(1.0)
+        assert not det.observe(10.0)
+        assert not det.observe(1.0)
+        assert det.strikes == 0
+
+    def test_driver_remesh_path(self, tmp_path):
+        out = _run(tmp_path, steps=14, straggle_from=5)
+        assert out["remeshes"] >= 1
+        assert out["state"].step == 14
+
+
+class TestDataDeterminism:
+    def test_step_addressed_batches(self):
+        ds = SyntheticLM(vocab=128, seq_len=16, global_batch=8, seed=3)
+        a = ds.global_batch_np(5)
+        b = ds.global_batch_np(5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = ds.global_batch_np(6)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_host_slice_consistent_with_global(self):
+        ds = SyntheticLM(vocab=128, seq_len=16, global_batch=8, seed=4)
+        full = ds.global_batch_np(2)
+        part = ds.host_slice(2, 3, 6)
+        np.testing.assert_array_equal(full["tokens"][3:6], part["tokens"])
+
+    def test_labels_are_next_token(self):
+        ds = SyntheticLM(vocab=128, seq_len=16, global_batch=2, seed=5)
+        b = ds.global_batch_np(0)
+        rows = ds._rows(0, np.arange(2))
+        np.testing.assert_array_equal(b["tokens"], rows[:, :-1])
+        np.testing.assert_array_equal(b["labels"], rows[:, 1:])

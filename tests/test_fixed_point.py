@@ -1,0 +1,78 @@
+"""Bit-accurate datapath tests — the paper's hardware claims, exactly."""
+
+import numpy as np
+import pytest
+
+from repro.core.fixed_point import FixedPointDatapath
+
+
+def _operands(n=2000, seed=0):
+    r = np.random.RandomState(seed)
+    d = r.uniform(1.0, 2.0 - 1e-9, n)
+    num = r.uniform(1.0, 2.0 - 1e-9, n)
+    return num, d
+
+
+class TestBitIdentical:
+    """Feedback datapath == pipelined datapath, bit for bit (paper §IV:
+    'achieved the same accuracy')."""
+
+    @pytest.mark.parametrize("passes", [1, 2, 3, 4])
+    def test_quotient_bits_equal(self, passes):
+        dp = FixedPointDatapath(p=7, frac_bits=28)
+        n, d = _operands()
+        a = dp.divide_pipelined(n, d, passes)
+        b = dp.divide_feedback(n, d, passes)
+        np.testing.assert_array_equal(a.q, b.q)
+        np.testing.assert_array_equal(a.r, b.r)
+
+    def test_same_hardware_activity(self):
+        """Same multiplication/complement COUNT — the feedback design
+        reuses one pair instead of instantiating more (paper §II)."""
+        dp = FixedPointDatapath()
+        n, d = _operands(100)
+        a = dp.divide_pipelined(n, d, 3)
+        b = dp.divide_feedback(n, d, 3)
+        assert a.mult_count == b.mult_count
+        assert a.compl_count == b.compl_count
+
+
+class TestAccuracy:
+    @pytest.mark.parametrize("p,passes,bits", [
+        (7, 1, 14), (7, 2, 26), (6, 2, 24), (8, 2, 27),
+    ])
+    def test_quotient_accuracy_bits(self, p, passes, bits):
+        """~2^(passes+1) * (p+1)-ish good bits, capped by frac_bits trunc."""
+        dp = FixedPointDatapath(p=p, frac_bits=30)
+        n, d = _operands(4000, seed=1)
+        err, _ = dp.max_quotient_error(n, d, passes)
+        assert err < 2.0 ** -bits, err
+
+    def test_truncation_biases_low(self):
+        """Hardware truncation only loses bits — q never exceeds n/d by
+        more than the complement rounding allowance ([4] §3 error budget)."""
+        dp = FixedPointDatapath(p=7, frac_bits=28)
+        n, d = _operands(4000, seed=2)
+        res = dp.divide_feedback(n, d, 3)
+        exact = n / d
+        over = (res.q_float - exact).max()
+        assert over < 2.0 ** -24
+
+
+class TestRomDatapath:
+    def test_rom_matches_float_lut(self):
+        dp = FixedPointDatapath(p=7, frac_bits=28)
+        # bucket MIDPOINTS: immune to encode-rounding at bucket boundaries
+        i = np.arange(128)
+        d = 1.0 + (i + 0.5) * 2.0 ** -7
+        rom = dp.rom(dp.encode(d))
+        from repro.core import lut
+
+        k_float = lut.reciprocal_table_f32(7)
+        np.testing.assert_allclose(
+            dp.decode(rom), k_float[i], rtol=0, atol=2.0 ** -28
+        )
+
+    def test_frac_bits_guard(self):
+        with pytest.raises(ValueError):
+            FixedPointDatapath(frac_bits=31)

@@ -1,0 +1,154 @@
+"""Paper-claim tests for the float Goldschmidt datapaths (core/goldschmidt)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import goldschmidt as gs
+from repro.core import lut
+
+F32 = np.float32
+
+
+def _rand(n, lo=1e-3, hi=1e3, seed=0, signed=True):
+    r = np.random.RandomState(seed)
+    mag = np.exp(r.uniform(np.log(lo), np.log(hi), n)).astype(F32)
+    if signed:
+        mag *= np.where(r.rand(n) < 0.5, -1, 1).astype(F32)
+    return mag
+
+
+class TestQuadraticConvergence:
+    """Seed gives ~(p+1) bits; every step-2 pass doubles them (paper §I)."""
+
+    @pytest.mark.parametrize("p", [5, 7, 9])
+    def test_error_squares_per_iteration(self, p):
+        m = jnp.asarray(np.linspace(1.0, 2.0, 4097, dtype=F32)[:-1])
+        prev_err = None
+        for iters in (0, 1, 2):
+            if iters == 0:
+                k = lut.lookup_reciprocal(m, p)
+                err = float(jnp.max(jnp.abs(m * k - 1.0)))
+            else:
+                q = gs.gs_reciprocal_normalized(m, p=p, iters=iters)
+                err = float(jnp.max(jnp.abs(m * q - 1.0)))
+            if prev_err is not None and prev_err > 2 ** -20:
+                # quadratic: err <= prev^2 (+ float rounding floor)
+                assert err <= prev_err ** 2 * 4 + 2 ** -22, (iters, err, prev_err)
+            prev_err = err
+
+    def test_two_passes_reach_fp32(self):
+        """Paper: 2 step-2 passes (q4) from a p=7 seed give >= 24 bits."""
+        d = jnp.asarray(_rand(20000, seed=1))
+        q = gs.gs_reciprocal(d, p=7, iters=2)
+        rel = np.abs(np.asarray(q) * np.asarray(d) - 1.0)
+        assert rel.max() < 2 ** -21  # ~fp32 eps x few ulp of iteration math
+
+    def test_iters_for_counter(self):
+        assert gs.iters_for(7, 24) == 2  # 8 -> 16 -> 32 bits
+        assert gs.iters_for(7, 8) == 1
+        assert gs.iters_for(7, 53) == 3  # 8 -> 16 -> 32 -> 64
+        assert gs.iters_for(3, 24) == 3  # 4 -> 8 -> 16 -> 32
+
+
+class TestVariantsAgree:
+    """Feedback (fori_loop) vs pipelined (unrolled): same arithmetic.
+
+    Float results may differ by compiler FMA contraction only (<= 2 ulp,
+    measured); the bit-exact hardware claim is tested in test_fixed_point.
+    """
+
+    @pytest.mark.parametrize("fn", [gs.gs_reciprocal, gs.gs_rsqrt, gs.gs_sqrt])
+    def test_within_two_ulp(self, fn):
+        x = jnp.asarray(np.abs(_rand(8192, seed=2)))
+        a = np.asarray(fn(x, variant="pipelined"))
+        b = np.asarray(fn(x, variant="feedback"))
+        ulp = np.abs(a.view(np.int32) - b.view(np.int32))
+        assert ulp.max() <= 2
+
+    def test_divide_matches(self):
+        n = jnp.asarray(_rand(4096, seed=3))
+        d = jnp.asarray(_rand(4096, seed=4))
+        a = np.asarray(gs.gs_divide(n, d, variant="pipelined"))
+        b = np.asarray(gs.gs_divide(n, d, variant="feedback"))
+        ulp = np.abs(a.view(np.int32) - b.view(np.int32))
+        assert ulp.max() <= 2
+
+
+class TestSpecials:
+    def test_reciprocal_specials(self):
+        x = jnp.asarray(np.array([0.0, -0.0, np.inf, -np.inf, np.nan], F32))
+        out = np.asarray(gs.gs_reciprocal(x))
+        assert np.isposinf(out[0]) and np.isneginf(out[1])
+        assert out[2] == 0.0 and out[3] == 0.0
+        assert np.isnan(out[4])
+
+    def test_divide_specials(self):
+        n = jnp.asarray(np.array([1.0, 0.0, np.inf, 0.0, -3.0], F32))
+        d = jnp.asarray(np.array([0.0, 0.0, np.inf, 5.0, np.inf], F32))
+        out = np.asarray(gs.gs_divide(n, d))
+        assert np.isposinf(out[0])
+        assert np.isnan(out[1]) and np.isnan(out[2])
+        assert out[3] == 0.0 and out[4] == 0.0
+
+    def test_rsqrt_domain(self):
+        x = jnp.asarray(np.array([0.0, np.inf, -1.0, np.nan], F32))
+        out = np.asarray(gs.gs_rsqrt(x))
+        assert np.isposinf(out[0]) and out[1] == 0.0
+        assert np.isnan(out[2]) and np.isnan(out[3])
+
+
+class TestHypothesisProperties:
+    @settings(max_examples=200, deadline=None)
+    @given(st.floats(min_value=2.0 ** -100, max_value=2.0 ** 100,
+                     allow_nan=False, width=32))
+    def test_recip_relative_error(self, x):
+        xv = jnp.asarray(np.float32(x))
+        q = float(gs.gs_reciprocal(xv))
+        assert abs(q * x - 1.0) < 2 ** -20
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.floats(min_value=2.0 ** -100, max_value=2.0 ** 100,
+                     allow_nan=False, width=32))
+    def test_rsqrt_relative_error(self, x):
+        xv = jnp.asarray(np.float32(x))
+        q = float(gs.gs_rsqrt(xv))
+        assert abs(q * np.sqrt(np.float64(x)) - 1.0) < 2 ** -20
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.floats(min_value=-(2.0 ** 64), max_value=2.0 ** 64,
+                     allow_nan=False, width=32),
+           st.floats(min_value=2.0 ** -64, max_value=2.0 ** 64,
+                     allow_nan=False, width=32))
+    def test_divide_matches_native(self, n, d):
+        from hypothesis import assume
+
+        ref = np.float64(n) / np.float64(d)
+        # documented domain: normal-range results (subnormals flush, as on
+        # TPU hardware)
+        assume(ref == 0 or 2.0 ** -125 < abs(ref) < 2.0 ** 127)
+        q = float(gs.gs_divide(jnp.float32(n), jnp.float32(d)))
+        if ref == 0:
+            assert abs(q) < 1e-30
+        else:
+            assert abs(q / ref - 1.0) < 2 ** -18
+
+
+class TestVariantAB:
+    """[4]'s Variants A/B consume q_i and the residual; the paper (§IV)
+    claims the feedback datapath leaves them unaffected.  Variant A uses
+    the final r to round-correct q; Variant B pipelines the error term.
+    Both reduce to: correction computed from (q, r) must be identical
+    between datapaths — which holds exactly in fixed point and to float
+    fusion noise here."""
+
+    def test_variant_a_round_correction(self):
+        m = jnp.asarray(np.linspace(1.0, 2.0, 1025, dtype=F32)[:-1])
+        for variant in ("pipelined", "feedback"):
+            q = gs.gs_reciprocal_normalized(m, p=7, iters=2, variant=variant)
+            # Variant A correction: q' = q * (2 - m*q), one more NR step
+            q2 = q * (2.0 - m * q)
+            err = float(jnp.max(jnp.abs(m * q2 - 1.0)))
+            assert err < 2 ** -22

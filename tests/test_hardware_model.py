@@ -1,0 +1,78 @@
+"""Cycle/area model vs the paper's §III-§V quantitative claims."""
+
+import pytest
+
+from repro.core import hardware_model as hw
+
+
+class TestLogicBlock:
+    """Truth table of §III, row by row."""
+
+    @pytest.mark.parametrize("r1p,rfbp,expected", [
+        (True, False, "r1"),     # row 1: only r1 present
+        (False, True, "rfb"),    # row 2: only feedback present
+        (True, True, "rfb"),     # row 3: feedback has priority
+        (False, False, 0),       # row 4: nothing present -> 0
+    ])
+    def test_truth_table(self, r1p, rfbp, expected):
+        out = hw.LogicBlock.select(r1p, rfbp, "r1", "rfb")
+        assert out == expected
+
+    def test_counter_set_and_reset(self):
+        """Counter sets after first pass, resets after the predetermined
+        number of passes so the next division starts from r1 (§III)."""
+        lb = hw.LogicBlock(predetermined_passes=3)
+        outs = []
+        for i in range(3):
+            out, done = lb.step(True, i > 0, "r1", f"rfb{i}")
+            outs.append((out, done))
+        assert outs[0] == ("r1", False)
+        assert outs[1] == ("rfb1", False)
+        assert outs[2] == ("rfb2", True)  # done -> counter reset
+        assert lb.counter == 0
+        out, _ = lb.step(True, False, "r1_next", None)
+        assert out == "r1_next"  # fresh division re-selects r1
+
+
+class TestCycleModel:
+    def test_nine_cycles_to_q2(self):
+        """[4]/paper: lookup(1) + mult(4) + mult(4) = 9 cycles to q2/r2,
+        in BOTH designs (the feedback mux is not yet on the path)."""
+        for design in ("pipelined", "feedback"):
+            s = hw.schedule_division(design, passes=3)
+            assert s.q2_cycle() == 9, (design, s.table())
+
+    @pytest.mark.parametrize("passes", [2, 3, 4, 5])
+    def test_feedback_costs_exactly_one_cycle(self, passes):
+        """§IV/§V: 'the trade off of one clock cycle for the general case'."""
+        a = hw.schedule_division("pipelined", passes).makespan
+        b = hw.schedule_division("feedback", passes).makespan
+        assert b == a + 1
+
+    def test_reused_units_in_feedback(self):
+        s = hw.schedule_division("feedback", 3)
+        units = {op.unit for op in s.ops if op.unit.startswith("MULTX")}
+        assert units == {"MULTX"}  # one physical X multiplier reused
+        p = hw.schedule_division("pipelined", 3)
+        punits = {op.unit for op in p.ops if op.unit.startswith("MULTX")}
+        assert len(punits) == 3  # one per pass
+
+
+class TestAreaModel:
+    def test_headline_savings(self):
+        """§V: feedback removes 3 multipliers and 2 complement units."""
+        s = hw.savings(passes=3)
+        assert s == {"multipliers": 3, "complementers": 2}
+
+    def test_area_counts(self):
+        a = hw.area("pipelined", 3)
+        b = hw.area("feedback", 3)
+        assert a["multipliers"] == 7 and b["multipliers"] == 4
+        assert a["complementers"] == 3 and b["complementers"] == 1
+        assert b["mux_counters"] == 1 and a["mux_counters"] == 0
+
+    def test_savings_grow_with_passes(self):
+        """More accuracy passes -> more area saved (the reuse scales)."""
+        s3 = hw.savings(3)["multipliers"]
+        s5 = hw.savings(5)["multipliers"]
+        assert s5 > s3

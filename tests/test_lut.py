@@ -1,0 +1,56 @@
+"""ROM table properties (Sarma-Matula [7] optimal reciprocal tables)."""
+
+import numpy as np
+import pytest
+
+from repro.core import lut
+
+
+@pytest.mark.parametrize("p", [4, 6, 7, 8, 10])
+class TestReciprocalTable:
+    def test_shape_and_width(self, p):
+        t = lut.reciprocal_table_int(p)
+        assert t.shape == (2 ** p,)
+        # p+2 output bits: values in [2^(p+1), 2^(p+2)]
+        assert t.min() >= 2 ** (p + 1)
+        assert t.max() <= 2 ** (p + 2)
+
+    def test_monotone_nonincreasing(self, p):
+        t = lut.reciprocal_table_int(p)
+        assert np.all(np.diff(t.astype(np.int64)) <= 0)
+
+    def test_seed_error_bound(self, p):
+        # optimal table: max relative error ~ 2^-(p+1) (with midpoint
+        # rounding it's slightly above; [4] budgets 2^-p safely)
+        err = lut.seed_rel_error_bound(p)
+        assert err < 2.0 ** -p
+        assert err > 2.0 ** -(p + 3)  # sanity: not magically better
+
+
+@pytest.mark.parametrize("p", [6, 7, 8])
+class TestRsqrtTable:
+    def test_range(self, p):
+        t = lut.rsqrt_table_int(p)
+        assert t.shape == (2 ** p,)
+        assert t.min() >= 2 ** (p + 1)
+        assert t.max() <= 2 ** (p + 2)
+
+    def test_seed_accuracy(self, p):
+        m = np.linspace(1.0, 4.0, 8193)[:-1].astype(np.float32)
+        import jax.numpy as jnp
+
+        y = np.asarray(lut.lookup_rsqrt(jnp.asarray(m), p))
+        rel = np.abs(y * np.sqrt(m.astype(np.float64)) - 1.0)
+        assert rel.max() < 2.0 ** -(p - 1)
+
+
+def test_lookup_reciprocal_indexing():
+    import jax.numpy as jnp
+
+    p = 7
+    t = lut.reciprocal_table_f32(p)
+    # exact bucket lows map to their own entry
+    i = np.arange(2 ** p)
+    m = (1.0 + i * 2.0 ** -p).astype(np.float32)
+    got = np.asarray(lut.lookup_reciprocal(jnp.asarray(m), p))
+    np.testing.assert_array_equal(got, t[i])
