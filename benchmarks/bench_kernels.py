@@ -74,6 +74,57 @@ def rows():
               for a, b in zip(got, want))
     out.append({"name": "k_adam_1000", "us_per_call": round(us, 1),
                 "derived": f"max_abs_err={err:.2e}"})
+    out.extend(_tuned_vs_default())
+    return out
+
+
+def _tuned_vs_default():
+    """Autotuned dispatch vs the hard-coded defaults.
+
+    The default config is always a member of the candidate sweep, so the
+    tuned pick is no slower than it (modulo timing noise); the second
+    autotune call is a pure cache lookup (`hit2nd=True` in `derived`).
+    Runs against a throwaway cache so a benchmark sweep neither reads nor
+    mutates the user's real tuning cache, and with tuning forced off for
+    the baseline so `default_us` is the literal defaults even under
+    REPRO_AUTOTUNE=1.
+    """
+    import os
+    import tempfile
+
+    from repro.kernels import tuning
+
+    out = []
+    prev_path = os.environ.get("REPRO_TUNE_CACHE")
+    tmpdir = tempfile.mkdtemp(prefix="repro-bench-tune-")
+    os.environ["REPRO_TUNE_CACHE"] = os.path.join(tmpdir, "cache.json")
+    try:
+        for kernel, shape in (("gs_recip", (256, 128)),
+                              ("gs_rsqrt", (256, 128))):
+            x = jnp.asarray(
+                np.abs(np.random.RandomState(10).randn(*shape))
+                .astype(np.float32) + 0.1)
+            fn = getattr(ops, kernel)
+            tuning.enable_tuning(False)
+            default_us = tuning.time_call(lambda: fn(x), warmup=1, repeats=5)
+            tuning.autotune(kernel, shape, jnp.float32)
+            hit = tuning.autotune(kernel, shape, jnp.float32)  # warm: no timing
+            tuning.enable_tuning(True)
+            tuned_us = tuning.time_call(lambda: fn(x), warmup=1, repeats=5)
+            cfg = tuning.resolve(kernel, x.shape, x.dtype)
+            out.append({
+                "name": f"k_{kernel}_tuned_{shape[0]}x{shape[1]}",
+                "us_per_call": round(tuned_us, 1),
+                "derived": (f"default_us={default_us:.1f} "
+                            f"cfg={cfg['variant']}/br{cfg['block_rows']} "
+                            f"hit2nd={hit.from_cache}"),
+            })
+    finally:
+        tuning.enable_tuning(None)
+        if prev_path is None:
+            os.environ.pop("REPRO_TUNE_CACHE", None)
+        else:
+            os.environ["REPRO_TUNE_CACHE"] = prev_path
     return out
 
 

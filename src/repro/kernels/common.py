@@ -44,6 +44,21 @@ _F32_MANT_MASK = np.int32(0x007FFFFF)
 _F32_ONE_BITS = np.int32(0x3F800000)
 
 
+def fit_block(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target.
+
+    Block sizes must tile the sequence exactly; tuned/default targets come
+    from pow2 buckets, real lengths (1500, 33, ...) do not.  Single home
+    for the clamping rule — dispatch (ops), the autotuner's candidate
+    generation (tuning.registry), and the chunked jnp attention path
+    (layers.attention) all route here.
+    """
+    blk = min(max(int(target), 1), int(s))
+    while s % blk:
+        blk -= 1
+    return blk
+
+
 def rom_table(p: int = DEFAULT_P) -> jnp.ndarray:
     """Reciprocal ROM as a (2^p, 1) f32 array (matmul-gather layout)."""
     return jnp.asarray(lut.reciprocal_table_f32(p)).reshape(-1, 1)

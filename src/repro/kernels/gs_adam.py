@@ -7,9 +7,11 @@ denominator into one VMEM pass makes the optimizer a single memory-bound
 sweep (read p,g,m,v / write p,m,v) with all arithmetic on the VPU/MXU —
 no transcendental-unit divide or sqrt.
 
-Bias corrections (1/(1-beta^t)) are scalars, precomputed on the host and
-passed via a (1, 2) operand broadcast to every tile (they change per step,
-so they cannot be compile-time constants).
+Bias corrections (1/(1-beta^t)) and the learning rate are scalars,
+precomputed outside the kernel and passed via a (1, 3) operand broadcast
+to every tile (they change per step / per schedule, so they cannot be
+compile-time constants; a traced ``lr`` from a schedule jits without
+recompiling).
 
 Tile: (32, 128) f32 — 7 tiles of 16 KB live + two one-hot ROM temps of
 (4096, 128) f32 = 2 MB each; working set < 5 MB VMEM.
@@ -29,7 +31,7 @@ DEFAULT_BLOCK_ROWS = 32
 
 
 def _kernel(p_ref, g_ref, m_ref, v_ref, bc_ref, rtab_ref, stab_ref,
-            po_ref, mo_ref, vo_ref, *, lr, beta1, beta2, eps, weight_decay,
+            po_ref, mo_ref, vo_ref, *, beta1, beta2, eps, weight_decay,
             p, iters, variant):
     param = p_ref[...].astype(jnp.float32)
     grad = g_ref[...].astype(jnp.float32)
@@ -37,6 +39,7 @@ def _kernel(p_ref, g_ref, m_ref, v_ref, bc_ref, rtab_ref, stab_ref,
     v = v_ref[...]
     bc1 = bc_ref[0, 0]
     bc2 = bc_ref[0, 1]
+    lr = bc_ref[0, 2]
     m_new = beta1 * m + (1.0 - beta1) * grad
     v_new = beta2 * v + (1.0 - beta2) * grad * grad
     v_hat = v_new * bc2
@@ -60,7 +63,7 @@ def _kernel(p_ref, g_ref, m_ref, v_ref, bc_ref, rtab_ref, stab_ref,
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "lr", "beta1", "beta2", "eps", "weight_decay", "p", "iters",
+        "beta1", "beta2", "eps", "weight_decay", "p", "iters",
         "variant", "block_rows", "interpret",
     ),
 )
@@ -71,7 +74,7 @@ def gs_adam_update(
     v: jnp.ndarray,
     step: jnp.ndarray,
     *,
-    lr: float,
+    lr,  # python float or scalar array (scheduled lr traces through)
     beta1: float = 0.9,
     beta2: float = 0.999,
     eps: float = 1e-8,
@@ -104,12 +107,13 @@ def gs_adam_update(
     v2 = prep(v, jnp.float32)
     stepf = step.astype(jnp.float32)
     bc = jnp.stack(
-        [1.0 / (1.0 - beta1 ** stepf), 1.0 / (1.0 - beta2 ** stepf)]
-    ).reshape(1, 2)
+        [1.0 / (1.0 - beta1 ** stepf), 1.0 / (1.0 - beta2 ** stepf),
+         jnp.asarray(lr, jnp.float32)]
+    ).reshape(1, 3)
 
     p_new, m_new, v_new = pl.pallas_call(
         functools.partial(
-            _kernel, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+            _kernel, beta1=beta1, beta2=beta2, eps=eps,
             weight_decay=weight_decay, p=p, iters=iters, variant=variant,
         ),
         grid=(rows_pad // block_rows,),
@@ -118,7 +122,7 @@ def gs_adam_update(
             pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
             pl.BlockSpec((1 << p, 1), lambda i: (0, 0)),
             pl.BlockSpec((1 << p, 1), lambda i: (0, 0)),
         ],

@@ -1,7 +1,15 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public dispatch front-end over the Pallas kernels.
 
-Shape-polymorphic dispatch: callers hand any-shaped arrays; wrappers pad /
-reshape to kernel tiling (done inside each kernel module) and restore.
+Shape-polymorphic: callers hand any-shaped arrays; wrappers pad / reshape
+to kernel tiling (done inside each kernel module) and restore.
+
+Every op resolves its launch config (``variant``, block shape, ``iters``,
+interpret-vs-compiled) through :mod:`repro.kernels.tuning` at trace time:
+explicit kwargs win, then — when tuning is enabled via ``REPRO_AUTOTUNE=1``
+or ``tuning.enable_tuning()`` — the persisted autotune cache for this
+``(kernel, shape-bucket, dtype, backend)``, then the registry defaults
+(the seed's hard-coded literals, so cold-start behavior is unchanged).
+
 ``interpret`` defaults to True because this container is CPU-only; on a
 real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
 ``interpret=False``) and the same BlockSpecs compile via Mosaic.
@@ -9,14 +17,16 @@ real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
 
 from __future__ import annotations
 
-import os
-
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gs_adam import gs_adam_update
-from repro.kernels.gs_recip import gs_recip
-from repro.kernels.gs_rmsnorm import gs_rmsnorm
-from repro.kernels.gs_rsqrt import gs_rsqrt, gs_sqrt
-from repro.kernels.gs_softmax import gs_softmax
+from repro.kernels import common
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.gs_adam import gs_adam_update as _gs_adam_update
+from repro.kernels.gs_recip import gs_recip as _gs_recip
+from repro.kernels.gs_rmsnorm import gs_rmsnorm as _gs_rmsnorm
+from repro.kernels.gs_rsqrt import gs_rsqrt as _gs_rsqrt
+from repro.kernels.gs_rsqrt import gs_sqrt as _gs_sqrt
+from repro.kernels.gs_softmax import gs_softmax as _gs_softmax
+from repro.kernels.tuning import dispatch
+from repro.kernels.tuning.dispatch import interpret_default  # noqa: F401
 
 __all__ = [
     "flash_attention",
@@ -30,5 +40,52 @@ __all__ = [
 ]
 
 
-def interpret_default() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+def gs_recip(x, *, p: int = common.DEFAULT_P, **config):
+    cfg = dispatch.resolve("gs_recip", x.shape, x.dtype, config)
+    return _gs_recip(x, p=p, **cfg)
+
+
+def gs_rsqrt(x, *, p: int = common.DEFAULT_P, **config):
+    cfg = dispatch.resolve("gs_rsqrt", x.shape, x.dtype, config)
+    return _gs_rsqrt(x, p=p, **cfg)
+
+
+def gs_sqrt(x, *, p: int = common.DEFAULT_P, **config):
+    # Same datapath, ROM, and tiling as rsqrt — shares its tuning entry.
+    cfg = dispatch.resolve("gs_rsqrt", x.shape, x.dtype, config)
+    return _gs_sqrt(x, p=p, **cfg)
+
+
+def gs_softmax(x, *, p: int = common.DEFAULT_P, **config):
+    cfg = dispatch.resolve("gs_softmax", x.shape, x.dtype, config)
+    return _gs_softmax(x, p=p, **cfg)
+
+
+def gs_rmsnorm(x, gain, *, eps: float = 1e-6, p: int = common.DEFAULT_P,
+               **config):
+    cfg = dispatch.resolve("gs_rmsnorm", x.shape, x.dtype, config)
+    return _gs_rmsnorm(x, gain, eps=eps, p=p, **cfg)
+
+
+def gs_adam_update(param, grad, m, v, step, *, lr, beta1: float = 0.9,
+                   beta2: float = 0.999, eps: float = 1e-8,
+                   weight_decay: float = 0.0, p: int = common.DEFAULT_P,
+                   **config):
+    cfg = dispatch.resolve("gs_adam", param.shape, param.dtype, config)
+    return _gs_adam_update(param, grad, m, v, step, lr=lr, beta1=beta1,
+                           beta2=beta2, eps=eps, weight_decay=weight_decay,
+                           p=p, **cfg)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
+                    p: int = common.DEFAULT_P, **config):
+    cfg = dispatch.resolve("flash_attention", q.shape, q.dtype, config)
+    # Tuned/default blocks come from a pow2 shape bucket, so clamp them to
+    # tile the actual sequence length — but never rewrite a block size the
+    # caller passed explicitly (the kernel's divisibility assert applies).
+    s = q.shape[2]
+    for key in ("block_q", "block_kv"):
+        if config.get(key) is None:
+            cfg[key] = common.fit_block(s, cfg[key])
+    return _flash_attention(q, k, v, causal=causal, sm_scale=sm_scale, p=p,
+                            **cfg)

@@ -1,0 +1,6 @@
+"""``python -m repro.kernels.tuning`` — the autotune CLI."""
+
+from repro.kernels.tuning.autotune import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Autotuner: time each candidate config, persist the winner.
+
+Timing reuses the ``benchmarks/bench_kernels.py`` idiom — call through the
+public kernel entry point, ``block_until_ready``, wall-clock with
+``perf_counter`` — with an explicit warmup call so compilation never lands
+in the measured window.  The winner goes into the on-disk JSON cache; a
+second run for the same ``(kernel, shape-bucket, dtype, backend)`` key is
+a pure cache hit and times nothing.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.kernels.tuning \
+        --kernel gs_recip --shape 1024x128
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tuning import cache as cache_mod
+from repro.kernels.tuning import dispatch, registry
+
+
+@dataclasses.dataclass(frozen=True)
+class Trial:
+    config: Dict[str, Any]
+    us_per_call: float
+
+
+# A candidate must beat the seed default by this fraction to displace it.
+# Wall-clock medians on a loaded host jitter by several percent; without
+# hysteresis the sweep can crown a config that re-measures slower than the
+# default it "beat".
+NOISE_MARGIN = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    kernel: str
+    key: str
+    config: Dict[str, Any]
+    us_per_call: Optional[float]
+    from_cache: bool
+    trials: List[Trial]
+
+
+def time_call(fn, *, warmup: int = 1, repeats: int = 3) -> float:
+    """Best-of-N wall-clock microseconds per call (post-warmup).
+
+    min, not median: the work is deterministic and timing noise is purely
+    additive (scheduler interference), so the fastest observation is the
+    closest to the true cost — the same reasoning as ``timeit``'s docs.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts) * 1e6)
+
+
+def autotune(
+    kernel: str,
+    shape: Sequence[int],
+    dtype=jnp.float32,
+    *,
+    force: bool = False,
+    candidates: Optional[Sequence[Dict[str, Any]]] = None,
+    warmup: int = 1,
+    repeats: int = 3,
+    cache: Optional[cache_mod.TuningCache] = None,
+) -> AutotuneResult:
+    """Tune one kernel for one shape bucket.
+
+    Returns a cached result untimed when the key is already present (use
+    ``force=True`` to re-time).  ``candidates`` restricts the sweep (tests
+    and constrained deploys); by default the registry's axis product is
+    swept, which always contains the seed defaults, so the selected config
+    is never slower than them.
+    """
+    shape = tuple(int(d) for d in shape)
+    spec = registry.get_spec(kernel)
+    if not spec.supports(shape):
+        raise ValueError(f"{kernel} does not support shape {shape}")
+    backend = jax.default_backend()
+    key = cache_mod.cache_key(kernel, shape, dtype, backend)
+    cache = cache if cache is not None else cache_mod.get_cache()
+
+    if not force:
+        entry = cache.get(key)
+        if entry is not None:
+            return AutotuneResult(
+                kernel=kernel,
+                key=key,
+                config=dict(entry.get("config", {})),
+                us_per_call=entry.get("us_per_call"),
+                from_cache=True,
+                trials=[],
+            )
+
+    args, kwargs = spec.make_args(shape, dtype)
+    trials: List[Trial] = []
+    for config in candidates if candidates is not None else spec.candidates(
+        shape, dtype, backend
+    ):
+        cfg = dispatch.finalize(config)
+        us = time_call(
+            lambda cfg=cfg: spec.fn(*args, **kwargs, **cfg),
+            warmup=warmup,
+            repeats=repeats,
+        )
+        trials.append(Trial(config=cfg, us_per_call=us))
+    best = min(trials, key=lambda t: t.us_per_call)
+    default_cfg = dispatch.finalize(spec.defaults)
+    default_trial = next(
+        (t for t in trials
+         if all(t.config.get(k) == v for k, v in default_cfg.items())),
+        None,
+    )
+    if (default_trial is not None
+            and best.us_per_call > default_trial.us_per_call
+            * (1.0 - NOISE_MARGIN)):
+        best = default_trial  # tie within noise: keep the seed default
+    cache.put(
+        key,
+        {
+            "config": best.config,
+            "us_per_call": best.us_per_call,
+            "backend": backend,
+            "tuned_shape": list(shape),
+            "candidates_timed": len(trials),
+            "jax": jax.__version__,
+        },
+    )
+    return AutotuneResult(
+        kernel=kernel,
+        key=key,
+        config=dict(best.config),
+        us_per_call=best.us_per_call,
+        from_cache=False,
+        trials=trials,
+    )
+
+
+def autotune_for_model(
+    *,
+    d_model: int,
+    n_heads: int,
+    head_dim: int,
+    batch: int,
+    prompt_len: int,
+    dtype=jnp.float32,
+    force: bool = False,
+    repeats: int = 3,
+) -> List[AutotuneResult]:
+    """Warm the cache for the shapes a ``kernel_impl='pallas'`` model
+    dispatches while serving — i.e. the exact keys its ``ops.*`` calls
+    will resolve: the 3-D residual-stream RMSNorm at prefill and decode
+    shapes, and the fused attention tile at the prefill shape (decode
+    attends through the dense jnp path, softmax/reciprocal run inside the
+    fused kernels, not as standalone dispatches)."""
+    return [
+        autotune("gs_rmsnorm", (batch, prompt_len, d_model), dtype,
+                 force=force, repeats=repeats),
+        autotune("gs_rmsnorm", (batch, 1, d_model), dtype, force=force,
+                 repeats=repeats),
+        autotune("flash_attention", (batch, n_heads, prompt_len, head_dim),
+                 dtype, force=force, repeats=repeats),
+    ]
+
+
+def _parse_shape(text: str) -> Tuple[int, ...]:
+    return tuple(int(t) for t in text.lower().split("x"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kernel", default="gs_recip",
+                    choices=sorted(registry.REGISTRY))
+    ap.add_argument("--shape", default="1024x128",
+                    help="operand shape, e.g. 1024x128 (flash: BxHxSxD)")
+    ap.add_argument("--dtype", default="float32",
+                    choices=("float32", "bfloat16"))
+    ap.add_argument("--force", action="store_true",
+                    help="re-time even on a cache hit")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    dtype = jnp.bfloat16 if args.dtype == "bfloat16" else jnp.float32
+    res = autotune(args.kernel, _parse_shape(args.shape), dtype,
+                   force=args.force, repeats=args.repeats)
+    src = ("cache hit" if res.from_cache
+           else f"{len(res.trials)} candidates timed")
+    print(f"{res.kernel} {args.shape} {args.dtype}: {res.config} "
+          f"({src}, {res.us_per_call:.1f} us/call)")
+    for t in sorted(res.trials, key=lambda t: t.us_per_call):
+        print(f"  {t.us_per_call:10.1f} us  {t.config}")
+    print(f"cache: {cache_mod.cache_path()}")
+
+
+if __name__ == "__main__":
+    main()

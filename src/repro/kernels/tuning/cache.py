@@ -1,0 +1,171 @@
+"""On-disk JSON cache of autotuned kernel configs.
+
+One file holds every tuned entry, keyed by ``kernel|shape-bucket|dtype|
+backend``.  Shapes are bucketed to the per-dimension next power of two so
+one timing run covers the whole bucket (a (100,) reciprocal and a (128,)
+reciprocal share an entry; a (300,) one does not).  The backend is part of
+the key because a config tuned in CPU interpret mode says nothing about
+Mosaic-compiled TPU tiles.
+
+Location: ``$REPRO_TUNE_CACHE`` if set, else
+``~/.cache/repro/tuning_cache.json``.  Delete the file (or call
+:func:`clear_cache`) to force re-tuning.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Sequence
+
+try:
+    import fcntl
+except ImportError:  # non-POSIX: fall back to atomic-rename-only safety
+    fcntl = None
+
+import numpy as np
+
+ENV_CACHE_PATH = "REPRO_TUNE_CACHE"
+DEFAULT_CACHE_PATH = "~/.cache/repro/tuning_cache.json"
+SCHEMA_VERSION = 1
+
+
+def cache_path() -> Path:
+    return Path(os.environ.get(ENV_CACHE_PATH, DEFAULT_CACHE_PATH)).expanduser()
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def shape_bucket(shape: Sequence[int]) -> str:
+    """Canonical bucket id: each dim rounded up to a power of two."""
+    if len(shape) == 0:
+        return "scalar"
+    return "x".join(str(_next_pow2(d)) for d in shape)
+
+
+def cache_key(kernel: str, shape: Sequence[int], dtype, backend: str) -> str:
+    return f"{kernel}|{shape_bucket(shape)}|{np.dtype(dtype).name}|{backend}"
+
+
+class TuningCache:
+    """Entries live in memory after the first read; ``put`` rewrites the
+    file atomically (tmp + rename) so concurrent readers never see a torn
+    JSON document."""
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.path = Path(path) if path is not None else cache_path()
+        self._entries: Optional[Dict[str, Any]] = None
+        self._lock = threading.Lock()
+
+    def _read_disk(self) -> Dict[str, Any]:
+        try:
+            raw = json.loads(self.path.read_text())
+            ok = isinstance(raw, dict) and raw.get("version") == SCHEMA_VERSION
+            return dict(raw.get("entries", {})) if ok else {}
+        except (FileNotFoundError, json.JSONDecodeError, OSError):
+            return {}
+
+    def _load(self) -> Dict[str, Any]:
+        if self._entries is None:
+            self._entries = self._read_disk()
+        return self._entries
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            return self._load().get(key)
+
+    def put(self, key: str, entry: Dict[str, Any]) -> None:
+        with self._lock, self._file_lock():
+            # Re-merge with the on-disk state so concurrent processes
+            # sharing this file don't clobber each other's entries.  Disk
+            # wins for conflicting keys: every put flushes, so anything
+            # differing on disk is a newer write by another process.
+            merged = dict(self._load())
+            merged.update(self._read_disk())
+            merged[key] = entry
+            self._entries = merged
+            self._flush()
+
+    def keys(self):
+        with self._lock:
+            return sorted(self._load())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._load())
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries = {}
+            try:
+                self.path.unlink()
+            except FileNotFoundError:
+                pass
+
+    def _file_lock(self):
+        """Advisory cross-process lock over the read-merge-write in put()
+        (no-op where fcntl is unavailable; the unique-tmp rename below
+        still guarantees readers never see a torn file)."""
+        cache = self
+
+        class _Lock:
+            def __enter__(self):
+                self.fd = None
+                if fcntl is not None:
+                    cache.path.parent.mkdir(parents=True, exist_ok=True)
+                    self.fd = os.open(
+                        str(cache.path) + ".lock", os.O_CREAT | os.O_RDWR
+                    )
+                    fcntl.flock(self.fd, fcntl.LOCK_EX)
+
+            def __exit__(self, *exc):
+                if self.fd is not None:
+                    fcntl.flock(self.fd, fcntl.LOCK_UN)
+                    os.close(self.fd)
+
+        return _Lock()
+
+    def _flush(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        # Unique tmp per writer: two processes flushing at once must not
+        # share one tmp inode, or the rename could publish a torn file.
+        fd, tmp = tempfile.mkstemp(
+            prefix=self.path.name + ".", suffix=".tmp",
+            dir=str(self.path.parent),
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(
+                    {"version": SCHEMA_VERSION, "entries": self._entries},
+                    f,
+                    indent=2,
+                    sort_keys=True,
+                )
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+_CACHES: Dict[Path, TuningCache] = {}
+
+
+def get_cache() -> TuningCache:
+    """Process-wide cache for the current env-selected path."""
+    p = cache_path()
+    cache = _CACHES.get(p)
+    if cache is None:
+        cache = _CACHES[p] = TuningCache(p)
+    return cache
+
+
+def clear_cache() -> None:
+    get_cache().clear()

@@ -1,0 +1,82 @@
+"""Config resolution for every kernel call.
+
+Precedence (highest first):
+
+1. explicit kwargs at the call site (``ops.gs_recip(x, variant="pipelined")``),
+2. the persisted autotune cache entry for ``(kernel, shape-bucket, dtype,
+   backend)`` — consulted only when tuning is enabled,
+3. the registry defaults (the seed's hard-coded literals).
+
+Tuning is off by default; enable with ``REPRO_AUTOTUNE=1`` or
+:func:`enable_tuning`.  With tuning disabled — or enabled but cold — every
+resolution is exactly the pre-tuning behavior.
+
+Resolution happens in Python at trace time (it reads only ``.shape`` /
+``.dtype``), so it is jit-safe and each distinct config stays one compiled
+executable.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Mapping, Optional, Sequence
+
+import jax
+
+from repro.kernels.tuning import cache as cache_mod
+from repro.kernels.tuning import registry
+
+ENV_ENABLE = "REPRO_AUTOTUNE"
+
+_enabled_override: Optional[bool] = None
+
+
+def interpret_default() -> bool:
+    """interpret=True unless REPRO_PALLAS_INTERPRET=0 (real-TPU deploys)."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def tuning_enabled() -> bool:
+    if _enabled_override is not None:
+        return _enabled_override
+    return os.environ.get(ENV_ENABLE, "0").lower() not in ("0", "", "false")
+
+
+def enable_tuning(on: Optional[bool] = True) -> None:
+    """Force tuned dispatch on/off for this process; ``None`` defers back
+    to the ``REPRO_AUTOTUNE`` environment variable."""
+    global _enabled_override
+    _enabled_override = on
+
+
+def finalize(config: Mapping[str, Any]) -> Dict[str, Any]:
+    """Concretize deferred values (interpret=None -> env default)."""
+    cfg = dict(config)
+    if cfg.get("interpret") is None:
+        cfg["interpret"] = interpret_default()
+    return cfg
+
+
+def resolve(
+    kernel: str,
+    shape: Sequence[int],
+    dtype,
+    overrides: Optional[Mapping[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Launch config for one kernel call; see module docstring for the
+    precedence.  ``overrides`` entries that are ``None`` are treated as
+    "not specified" so call sites can forward optional policy fields
+    (e.g. ``iters=policy.iters``) verbatim."""
+    spec = registry.get_spec(kernel)
+    cfg = dict(spec.defaults)
+    if tuning_enabled():
+        key = cache_mod.cache_key(kernel, shape, dtype, jax.default_backend())
+        entry = cache_mod.get_cache().get(key)
+        if entry is not None:
+            tuned = entry.get("config", {})
+            # Unknown keys in a stale/foreign cache entry must not reach
+            # the kernel signature.
+            cfg.update({k: v for k, v in tuned.items() if k in cfg})
+    if overrides:
+        cfg.update({k: v for k, v in overrides.items() if v is not None})
+    return finalize(cfg)

@@ -1,0 +1,220 @@
+"""Declarative registry of the tunable Goldschmidt Pallas kernels.
+
+Each :class:`KernelSpec` names the kernel's tunable axes — the knobs the
+paper treats as *hardware* choices (replicated vs reused multiplier pair,
+tile shape, predetermined iteration counter) that this subsystem turns
+into a runtime policy:
+
+* ``variant``     — ``feedback`` (one multiplier pair + feedback mux) vs
+                    ``pipelined`` (unrolled replicated pairs),
+* ``block_rows`` / ``block_q`` / ``block_kv`` — VMEM tile shape,
+* ``iters``       — §III's accuracy counter, derived from the output dtype
+                    via :func:`repro.core.goldschmidt.iters_for`,
+* ``interpret``   — interpret-mode vs Mosaic-compiled pallas_call
+                    (candidate set depends on the backend).
+
+``defaults`` reproduce the seed's hard-coded literals exactly, so a cold
+cache (or tuning disabled) is behavior-identical to the pre-tuning tree.
+``make_args`` builds representative operands for the autotuner's timing
+runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.goldschmidt import iters_for
+from repro.kernels import common
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gs_adam import gs_adam_update
+from repro.kernels.gs_recip import gs_recip
+from repro.kernels.gs_rmsnorm import gs_rmsnorm
+from repro.kernels.gs_rsqrt import gs_rsqrt
+from repro.kernels.gs_softmax import gs_softmax
+
+Shape = Tuple[int, ...]
+AxisValues = Sequence[Any]
+AxisFn = Callable[[Shape, Any, str], AxisValues]
+
+
+def _target_bits(dtype) -> int:
+    name = np.dtype(dtype).name
+    return {"float32": 24, "bfloat16": 8, "float16": 11}.get(name, 24)
+
+
+def _iters_axis(shape: Shape, dtype, backend: str) -> AxisValues:
+    """Accuracy-predetermined counter: never fewer bits than the output
+    dtype needs, never more than the fp32 default (2 passes from p=7)."""
+    derived = iters_for(common.DEFAULT_P, _target_bits(dtype))
+    return tuple(sorted({min(derived, 2), 2}))
+
+
+def _interpret_axis(shape: Shape, dtype, backend: str) -> AxisValues:
+    # CPU has no Mosaic lowering: interpret is the only path.  On real
+    # backends interpret mode is orders of magnitude slower and never
+    # wins — sweeping it would dominate the tuning wall-clock, so only
+    # the compiled path is a candidate there.
+    return (True,) if backend == "cpu" else (False,)
+
+
+def _seq_block_axis(shape: Shape, dtype, backend: str) -> AxisValues:
+    s = shape[2]
+    cands = tuple(b for b in (64, 128, 256) if b <= s and s % b == 0)
+    return cands or (common.fit_block(s, 128),)
+
+
+def _logpos(shape: Shape, dtype, seed: int = 0) -> jnp.ndarray:
+    r = np.random.RandomState(seed)
+    a = np.exp(r.uniform(-3.0, 3.0, shape)).astype(np.float32)
+    return jnp.asarray(a).astype(dtype)
+
+
+def _args_elementwise(shape, dtype):
+    return (_logpos(shape, dtype),), {}
+
+
+def _args_rowwise(shape, dtype):
+    r = np.random.RandomState(1)
+    x = jnp.asarray((r.randn(*shape) * 4).astype(np.float32)).astype(dtype)
+    return (x,), {}
+
+
+def _args_rmsnorm(shape, dtype):
+    r = np.random.RandomState(2)
+    x = jnp.asarray(r.randn(*shape).astype(np.float32)).astype(dtype)
+    g = jnp.asarray(r.randn(shape[-1]).astype(np.float32))
+    return (x, g), {}
+
+
+def _args_adam(shape, dtype):
+    r = np.random.RandomState(3)
+    mk = lambda scale=1.0: jnp.asarray((r.randn(*shape) * scale).astype(np.float32))
+    args = (mk(), mk(), mk(0.1), jnp.abs(mk(0.01)), jnp.asarray(1))
+    return args, {"lr": 1e-3}
+
+
+def _args_flash(shape, dtype):
+    b, h, s, d = shape
+    r = np.random.RandomState(4)
+    mk = lambda: jnp.asarray(r.randn(b, h, s, d).astype(np.float32)).astype(dtype)
+    return (mk(), mk(), mk()), {"causal": True}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    name: str
+    fn: Callable[..., Any]
+    defaults: Mapping[str, Any]
+    axes: Mapping[str, Any]  # axis -> values tuple | AxisFn
+    make_args: Callable[[Shape, Any], Tuple[tuple, dict]]
+    supports: Callable[[Shape], bool] = lambda shape: len(shape) >= 1
+
+    def candidates(
+        self, shape: Shape, dtype, backend: str
+    ) -> Sequence[Dict[str, Any]]:
+        """Cartesian product of the axes, concretized for shape/dtype/
+        backend.  The seed defaults are axis members by construction, so
+        the autotuned winner can never lose to them."""
+        names = list(self.axes)
+        values = [
+            v(shape, dtype, backend) if callable(v) else v
+            for v in (self.axes[n] for n in names)
+        ]
+        return [dict(zip(names, combo)) for combo in itertools.product(*values)]
+
+
+_ELEMENTWISE_AXES = {
+    "variant": ("feedback", "pipelined"),
+    "block_rows": (32, 64, 128),
+    "iters": _iters_axis,
+    "interpret": _interpret_axis,
+}
+
+_ROWWISE_AXES = {
+    "variant": ("feedback", "pipelined"),
+    "block_rows": (8, 16, 32),
+    "iters": _iters_axis,
+    "interpret": _interpret_axis,
+}
+
+REGISTRY: Dict[str, KernelSpec] = {
+    spec.name: spec
+    for spec in (
+        KernelSpec(
+            name="gs_recip",
+            fn=gs_recip,
+            defaults={"variant": "feedback", "block_rows": 64, "iters": 2,
+                      "interpret": None},
+            axes=_ELEMENTWISE_AXES,
+            make_args=_args_elementwise,
+        ),
+        KernelSpec(
+            name="gs_rsqrt",
+            fn=gs_rsqrt,
+            defaults={"variant": "feedback", "block_rows": 64, "iters": 2,
+                      "interpret": None},
+            axes=_ELEMENTWISE_AXES,
+            make_args=_args_elementwise,
+        ),
+        KernelSpec(
+            name="gs_rmsnorm",
+            fn=gs_rmsnorm,
+            defaults={"variant": "feedback", "block_rows": 8, "iters": 2,
+                      "interpret": None},
+            axes=_ROWWISE_AXES,
+            make_args=_args_rmsnorm,
+            supports=lambda shape: len(shape) >= 2,
+        ),
+        KernelSpec(
+            name="gs_softmax",
+            fn=gs_softmax,
+            defaults={"variant": "feedback", "block_rows": 8, "iters": 2,
+                      "interpret": None},
+            axes=_ROWWISE_AXES,
+            make_args=_args_rowwise,
+            supports=lambda shape: len(shape) >= 2,
+        ),
+        KernelSpec(
+            name="gs_adam",
+            fn=gs_adam_update,
+            defaults={"variant": "feedback", "block_rows": 32, "iters": 2,
+                      "interpret": None},
+            axes={
+                "variant": ("feedback", "pipelined"),
+                "block_rows": (16, 32, 64),
+                "iters": _iters_axis,
+                "interpret": _interpret_axis,
+            },
+            make_args=_args_adam,
+        ),
+        KernelSpec(
+            name="flash_attention",
+            fn=flash_attention,
+            defaults={"variant": "feedback", "block_q": 128, "block_kv": 128,
+                      "iters": 2, "interpret": None},
+            axes={
+                "variant": ("feedback", "pipelined"),
+                "block_q": _seq_block_axis,
+                "block_kv": _seq_block_axis,
+                "iters": _iters_axis,
+                "interpret": _interpret_axis,
+            },
+            make_args=_args_flash,
+            supports=lambda shape: len(shape) == 4,
+        ),
+    )
+}
+
+
+def get_spec(name: str) -> KernelSpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {sorted(REGISTRY)}"
+        ) from None

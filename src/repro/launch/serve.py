@@ -47,12 +47,35 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="pre-tune kernel configs for this serving shape "
+                         "(persists to the tuning cache) and serve with "
+                         "tuned dispatch enabled")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
     s_max = args.prompt_len + args.gen
     assert s_max <= cfg.max_seq, (s_max, cfg.max_seq)
+
+    if args.autotune:
+        import dataclasses
+
+        from repro.kernels import tuning
+
+        tuning.enable_tuning(True)
+        # Serve through the Pallas kernels: the jnp path has no tunable
+        # launch config, so tuned dispatch only means something here.
+        cfg = dataclasses.replace(cfg, kernel_impl="pallas")
+        for res in tuning.autotune_for_model(
+                d_model=cfg.d_model, n_heads=cfg.n_heads,
+                head_dim=cfg.head_dim_, batch=args.batch,
+                prompt_len=args.prompt_len):
+            src = ("cache hit" if res.from_cache
+                   else f"timed {len(res.trials)} candidates")
+            print(f"autotune {res.kernel}: {res.config} "
+                  f"({src}, {res.us_per_call:.0f} us/call)")
+        print(f"tuning cache: {tuning.cache_path()}")
     rng = np.random.RandomState(args.seed)
     params = api.init(cfg, jax.random.key(args.seed))
 

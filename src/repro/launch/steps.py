@@ -54,7 +54,7 @@ def make_train_step(cfg: ArchConfig, hp: Optional[TrainHParams] = None,
             new_params, new_opt, metrics = adamw_update(
                 params, grads, opt_state, lr=lr, policy=policy,
                 beta1=hp.beta1, beta2=hp.beta2, weight_decay=hp.weight_decay,
-                clip_norm=hp.clip_norm,
+                clip_norm=hp.clip_norm, kernel_impl=cfg.kernel_impl,
             )
             return new_params, new_opt, {"loss": loss, **metrics}
 

@@ -219,10 +219,46 @@ def flash_chunked(
 
 def _pick_block(s: int, target: int) -> int:
     """Largest divisor of s that is <= target (handles s=1500 etc.)."""
-    blk = min(target, s)
-    while s % blk:
-        blk -= 1
-    return blk
+    from repro.kernels.common import fit_block  # lazy: keep layers light
+
+    return fit_block(s, target)
+
+
+def flash(
+    q: jnp.ndarray,  # (b, s, H, hd)
+    k: jnp.ndarray,  # (b, s, KH, hd)
+    v: jnp.ndarray,
+    *,
+    policy: NumericsPolicy,
+    causal: bool = True,
+    kernel_impl: str = "jnp",
+    q_block: int = 512,
+    kv_block: int = 1024,
+    block_skip: bool = False,
+    seq_shard: bool = False,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Train/prefill attention front-end: fused Pallas kernel or chunked jnp.
+
+    ``kernel_impl='pallas'`` routes through :mod:`repro.kernels.ops`, whose
+    dispatch fills block_q/block_kv (and the interpret path) from the
+    autotune cache when tuning is enabled; the policy pins the Goldschmidt
+    variant and iteration count either way.
+    """
+    if kernel_impl == "pallas":
+        from repro.kernels import ops
+
+        o = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, sm_scale=sm_scale,
+            variant=policy.variant, iters=policy.iters,
+        )
+        return o.transpose(0, 2, 1, 3)
+    return flash_chunked(
+        q, k, v, policy=policy, causal=causal, q_block=q_block,
+        kv_block=kv_block, block_skip=block_skip, seq_shard=seq_shard,
+        sm_scale=sm_scale,
+    )
 
 
 def attention_dense(

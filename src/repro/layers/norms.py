@@ -26,9 +26,11 @@ def rmsnorm(params, x, *, eps: float, policy: NumericsPolicy,
     if kernel_impl == "pallas":
         from repro.kernels import ops
 
+        # block_rows / interpret resolve through the tuning dispatch; the
+        # policy pins the datapath variant and (if set) the iteration count.
         return ops.gs_rmsnorm(
             x, params["scale"], eps=eps, variant=policy.variant,
-            interpret=ops.interpret_default(),
+            iters=policy.iters,
         )
     x32 = x.astype(jnp.float32)
     ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)

@@ -106,21 +106,13 @@ def block_apply(
             o = attn.decode_attention(q, kc, vc, cur_index, policy=policy)
             new_state = {"k": kc, "v": vc}
         else:
-            if cfg.kernel_impl == "pallas":
-                from repro.kernels import ops
-
-                o = ops.flash_attention(
-                    q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-                    v.transpose(0, 2, 1, 3), causal=True,
-                    variant=policy.variant, interpret=ops.interpret_default(),
-                ).transpose(0, 2, 1, 3)
-            else:
-                o = attn.flash_chunked(
-                    q, k, v, policy=policy, causal=True,
-                    q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
-                    block_skip=cfg.attn_block_skip,
-                    seq_shard=cfg.attn_seq_shard,
-                )
+            o = attn.flash(
+                q, k, v, policy=policy, causal=True,
+                kernel_impl=cfg.kernel_impl,
+                q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+                block_skip=cfg.attn_block_skip,
+                seq_shard=cfg.attn_seq_shard,
+            )
             if mode == "prefill":
                 new_state = {"k": k, "v": v}
         out = attn.out_proj(params["attn"], o)

@@ -54,27 +54,43 @@ def adamw_update(
     eps: float = 1e-8,
     weight_decay: float = 0.1,
     clip_norm: Optional[float] = 1.0,
+    kernel_impl: str = "jnp",
 ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    """``kernel_impl='pallas'`` runs each leaf through the fused
+    ``gs_adam`` Pallas kernel (one VMEM sweep; block shape from the
+    tuning dispatch) instead of the unfused jnp expression."""
     step = state["step"] + 1
     stepf = step.astype(jnp.float32)
     if clip_norm is not None:
         grads, gnorm = clip_by_global_norm(grads, clip_norm, policy)
     else:
         gnorm = global_norm(grads, policy)
-    bc1 = 1.0 - beta1 ** stepf
-    bc2 = 1.0 - beta2 ** stepf
-    inv_bc1 = policy.reciprocal(bc1)
-    inv_bc2 = policy.reciprocal(bc2)
+    if kernel_impl == "pallas":
+        from repro.kernels import ops
 
-    def upd(p, g, m, v):
-        g32 = g.astype(jnp.float32)
-        m_new = beta1 * m + (1.0 - beta1) * g32
-        v_new = beta2 * v + (1.0 - beta2) * g32 * g32
-        denom = policy.sqrt(v_new * inv_bc2) + eps
-        update = (m_new * inv_bc1) * policy.reciprocal(denom)
-        p32 = p.astype(jnp.float32)
-        p_new = p32 - lr * (update + weight_decay * p32)
-        return p_new.astype(p.dtype), m_new, v_new
+        def upd(p, g, m, v):
+            return ops.gs_adam_update(
+                p, g, m, v, step, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=weight_decay, variant=policy.variant,
+                iters=policy.iters,
+            )
+    else:
+        # The fused kernel recomputes these from its bc operand; only the
+        # jnp path consumes them.
+        bc1 = 1.0 - beta1 ** stepf
+        bc2 = 1.0 - beta2 ** stepf
+        inv_bc1 = policy.reciprocal(bc1)
+        inv_bc2 = policy.reciprocal(bc2)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = beta1 * m + (1.0 - beta1) * g32
+            v_new = beta2 * v + (1.0 - beta2) * g32 * g32
+            denom = policy.sqrt(v_new * inv_bc2) + eps
+            update = (m_new * inv_bc1) * policy.reciprocal(denom)
+            p32 = p.astype(jnp.float32)
+            p_new = p32 - lr * (update + weight_decay * p32)
+            return p_new.astype(p.dtype), m_new, v_new
 
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)

@@ -1,0 +1,234 @@
+"""Tuning subsystem: cache round-trip, shape-bucket keying, default
+fallback, autotune persistence (second run = pure cache hit), and
+bit-identical dispatch between tuned and default configs."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import importlib
+
+from repro.kernels import ops, tuning
+
+# the package re-exports the autotune *function*, which shadows the
+# submodule attribute — fetch the module itself for monkeypatching
+autotune_mod = importlib.import_module("repro.kernels.tuning.autotune")
+
+F32 = jnp.float32
+
+
+@pytest.fixture(autouse=True)
+def isolated_cache(tmp_path, monkeypatch):
+    """Every test gets its own cache file and starts with tuning disabled."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tuning_cache.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    tuning.enable_tuning(None)
+    yield
+    tuning.enable_tuning(None)
+
+
+def _backend():
+    return jax.default_backend()
+
+
+def _entry(**config):
+    return {"config": config, "us_per_call": 1.0, "backend": _backend()}
+
+
+class TestKeys:
+    def test_shape_bucket_rounds_up_to_pow2(self):
+        assert tuning.shape_bucket((100,)) == "128"
+        assert tuning.shape_bucket((128,)) == "128"
+        assert tuning.shape_bucket((100, 64)) == "128x64"
+        assert tuning.shape_bucket((1,)) == "1"
+
+    def test_same_bucket_same_key(self):
+        a = tuning.cache_key("gs_recip", (100,), F32, "cpu")
+        b = tuning.cache_key("gs_recip", (128,), F32, "cpu")
+        assert a == b
+
+    def test_key_separates_shape_dtype_backend_kernel(self):
+        base = tuning.cache_key("gs_recip", (128,), F32, "cpu")
+        assert tuning.cache_key("gs_recip", (300,), F32, "cpu") != base
+        assert tuning.cache_key("gs_recip", (128,), jnp.bfloat16, "cpu") != base
+        assert tuning.cache_key("gs_recip", (128,), F32, "tpu") != base
+        assert tuning.cache_key("gs_rsqrt", (128,), F32, "cpu") != base
+
+
+class TestCache:
+    def test_roundtrip_write_reload_hit(self, tmp_path):
+        path = tmp_path / "c.json"
+        c1 = tuning.TuningCache(path)
+        c1.put("k1", _entry(block_rows=32))
+        # fresh instance re-reads from disk
+        c2 = tuning.TuningCache(path)
+        assert c2.get("k1")["config"]["block_rows"] == 32
+        raw = json.loads(path.read_text())
+        assert "k1" in raw["entries"]
+
+    def test_clear_removes_file_and_entries(self, tmp_path):
+        path = tmp_path / "c.json"
+        c = tuning.TuningCache(path)
+        c.put("k", _entry())
+        c.clear()
+        assert c.get("k") is None
+        assert not path.exists()
+
+    def test_corrupt_file_is_empty_cache(self, tmp_path):
+        path = tmp_path / "c.json"
+        path.write_text("{not json")
+        assert tuning.TuningCache(path).get("k") is None
+
+
+class TestDispatch:
+    DEFAULTS = {"variant": "feedback", "block_rows": 64, "iters": 2}
+
+    def test_disabled_ignores_cache(self):
+        tuning.get_cache().put(
+            tuning.cache_key("gs_recip", (64, 128), F32, _backend()),
+            _entry(variant="pipelined", block_rows=32),
+        )
+        cfg = tuning.resolve("gs_recip", (64, 128), F32)
+        for k, v in self.DEFAULTS.items():
+            assert cfg[k] == v
+
+    def test_enabled_empty_cache_falls_back_to_defaults(self):
+        tuning.enable_tuning(True)
+        cfg = tuning.resolve("gs_recip", (64, 128), F32)
+        for k, v in self.DEFAULTS.items():
+            assert cfg[k] == v
+
+    def test_backend_mismatch_falls_back_to_defaults(self):
+        other = "tpu" if _backend() != "tpu" else "cpu"
+        tuning.get_cache().put(
+            tuning.cache_key("gs_recip", (64, 128), F32, other),
+            _entry(block_rows=32),
+        )
+        tuning.enable_tuning(True)
+        assert tuning.resolve("gs_recip", (64, 128), F32)["block_rows"] == 64
+
+    def test_enabled_uses_tuned_entry_and_overrides_win(self):
+        tuning.get_cache().put(
+            tuning.cache_key("gs_recip", (64, 128), F32, _backend()),
+            _entry(block_rows=32),
+        )
+        tuning.enable_tuning(True)
+        assert tuning.resolve("gs_recip", (64, 128), F32)["block_rows"] == 32
+        cfg = tuning.resolve("gs_recip", (64, 128), F32, {"block_rows": 128})
+        assert cfg["block_rows"] == 128
+
+    def test_none_overrides_are_unspecified(self):
+        cfg = tuning.resolve("gs_recip", (64, 128), F32,
+                             {"iters": None, "variant": "pipelined"})
+        assert cfg["iters"] == 2 and cfg["variant"] == "pipelined"
+
+    def test_stale_cache_keys_are_filtered(self):
+        tuning.get_cache().put(
+            tuning.cache_key("gs_recip", (64, 128), F32, _backend()),
+            _entry(block_rows=32, bogus_axis=7),
+        )
+        tuning.enable_tuning(True)
+        cfg = tuning.resolve("gs_recip", (64, 128), F32)
+        assert "bogus_axis" not in cfg
+
+    def test_env_flag_enables(self, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+        assert tuning.tuning_enabled()
+        monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+        assert not tuning.tuning_enabled()
+
+
+CANDS = [
+    {"variant": "feedback", "block_rows": 32, "iters": 2, "interpret": True},
+    {"variant": "feedback", "block_rows": 64, "iters": 2, "interpret": True},
+]
+
+
+class TestAutotune:
+    def test_persists_then_hits_cache_without_retiming(self, monkeypatch):
+        r1 = tuning.autotune("gs_recip", (8, 128), F32, candidates=CANDS,
+                             warmup=1, repeats=1)
+        assert not r1.from_cache and len(r1.trials) == 2
+        assert r1.config in CANDS
+        assert tuning.get_cache().get(r1.key)["config"] == r1.config
+
+        # second run must not time anything
+        def boom(*a, **k):
+            raise AssertionError("re-timed despite a warm cache")
+
+        monkeypatch.setattr(autotune_mod, "time_call", boom)
+        r2 = tuning.autotune("gs_recip", (8, 128), F32, candidates=CANDS)
+        assert r2.from_cache and r2.trials == [] and r2.config == r1.config
+        # same bucket, different concrete shape: still a hit
+        r3 = tuning.autotune("gs_recip", (5, 100), F32, candidates=CANDS)
+        assert r3.from_cache
+
+    def test_candidates_include_registry_defaults(self):
+        spec = tuning.get_spec("gs_recip")
+        cands = spec.candidates((64, 128), F32, _backend())
+        assert any(
+            c["variant"] == "feedback" and c["block_rows"] == 64
+            and c["iters"] == 2 for c in cands
+        )
+
+    def test_unknown_kernel_raises(self):
+        with pytest.raises(KeyError):
+            tuning.autotune("gs_nope", (8, 128), F32)
+
+
+class TestDispatchParity:
+    """A tuned tile shape must not change the arithmetic: same elementwise
+    datapath => bit-identical outputs for gs_recip / gs_rsqrt."""
+
+    @pytest.mark.parametrize("kernel", ["gs_recip", "gs_rsqrt"])
+    def test_tuned_config_bit_identical_to_default(self, kernel):
+        r = np.random.RandomState(0)
+        x = jnp.asarray(np.exp(r.uniform(-3, 3, (100,))).astype(np.float32))
+        fn = getattr(ops, kernel)
+        want = np.asarray(fn(x))
+        tuning.get_cache().put(
+            tuning.cache_key(kernel, x.shape, x.dtype, _backend()),
+            _entry(variant="feedback", block_rows=32, iters=2, interpret=True),
+        )
+        tuning.enable_tuning(True)
+        got = np.asarray(fn(x))
+        np.testing.assert_array_equal(got, want)
+
+    def test_explicit_kwargs_beat_tuned_config(self):
+        x = jnp.asarray(np.linspace(0.5, 2.0, 64, dtype=np.float32))
+        tuning.get_cache().put(
+            tuning.cache_key("gs_recip", x.shape, x.dtype, _backend()),
+            _entry(variant="feedback", block_rows=64, iters=2, interpret=True),
+        )
+        tuning.enable_tuning(True)
+        from repro.kernels.gs_recip import gs_recip as raw
+
+        got = np.asarray(ops.gs_recip(x, variant="pipelined"))
+        want = np.asarray(raw(x, variant="pipelined"))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestPallasAdamRoute:
+    def test_adamw_update_pallas_matches_jnp(self):
+        from repro.core.policy import GS_FEEDBACK
+        from repro.optim import adamw_init, adamw_update
+
+        r = np.random.RandomState(3)
+        params = {"w": jnp.asarray(r.randn(40, 16), jnp.float32)}
+        grads = {"w": jnp.asarray(r.randn(40, 16), jnp.float32)}
+        out = []
+        for impl in ("jnp", "pallas"):
+            state = adamw_init(params)
+            p, s, _ = adamw_update(
+                params, grads, state, lr=jnp.float32(1e-3),
+                policy=GS_FEEDBACK, clip_norm=None, kernel_impl=impl)
+            out.append((p, s))
+        np.testing.assert_allclose(
+            np.asarray(out[0][0]["w"]), np.asarray(out[1][0]["w"]),
+            atol=2e-6, rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(out[0][1]["m"]["w"]), np.asarray(out[1][1]["m"]["w"]),
+            atol=1e-6)
