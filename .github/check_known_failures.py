@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Diff a pytest log's FAILED/ERROR lines against the known-failures list.
+
+Usage: check_known_failures.py <pytest_log> <known_failures.txt>
+
+Exit 1 when a failure is NOT in the list (a regression vs the burn-down).
+Known entries that now pass are reported so the list keeps shrinking.
+"""
+
+import re
+import sys
+
+
+def parse_failures(log_path: str) -> set:
+    ids = set()
+    pat = re.compile(r"^(?:FAILED|ERROR)\s+(\S+)")
+    with open(log_path) as f:
+        for line in f:
+            m = pat.match(line.strip())
+            if m:
+                ids.add(m.group(1))
+    return ids
+
+
+def parse_known(list_path: str) -> set:
+    known = set()
+    with open(list_path) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                known.add(line)
+    return known
+
+
+def main() -> int:
+    log_path, list_path = sys.argv[1], sys.argv[2]
+    failures = parse_failures(log_path)
+    known = parse_known(list_path)
+    new = sorted(failures - known)
+    fixed = sorted(known - failures)
+    if fixed:
+        print(f"known failures now PASSING — remove from {list_path}:")
+        for t in fixed:
+            print(f"  {t}")
+    if new:
+        print("NEW failures (not in the known-failures list):")
+        for t in new:
+            print(f"  {t}")
+        return 1
+    print(f"full suite: {len(failures)} failures, all known "
+          f"({len(known)} listed)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -39,11 +39,31 @@ hardware reduction leaves these variants intact):
 
 All arithmetic is multiply/add only — no hardware divide — which is the
 entire point on TPU: the VPU has fast fused multiply-add and no divider.
+
+Differentiation (training support)
+----------------------------------
+
+The forward normalize step peels IEEE-754 fields (``frexp`` / bit ops),
+which has no gradient: ``jax.grad`` through the raw iteration silently
+returns zeros for every denominator. Each public op therefore carries a
+``custom_vjp`` that treats the converged quotient as an exact result —
+justified by the parametric error analysis of Goldschmidt FP division
+(arXiv:2305.03728): after the predetermined iteration count the result is
+correctly rounded to the target precision, so the derivative of the
+*ideal* function is the right cotangent map. The rules reuse the
+forward's own outputs as residuals (the paper's reuse-the-datapath move,
+applied to autodiff):
+
+    d(1/x)      = -q·q          (q = the forward quotient)
+    d(n/d)      = (dn - q·dd)·(1/d)   (1/d = one backward Goldschmidt pass)
+    d(x^-1/2)   = -q³/2
+    d(sqrt x)   = (1/q)/2             (via one backward Goldschmidt pass)
+
+No rule differentiates through ``fori_loop`` or the bit peel.
 """
 
 from __future__ import annotations
 
-import math
 from functools import partial
 from typing import Tuple
 
@@ -163,18 +183,23 @@ def gs_rsqrt_normalized(
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("p", "iters", "variant"))
-def gs_reciprocal(
-    d: jnp.ndarray,
-    *,
-    p: int = DEFAULT_P,
-    iters: int | None = None,
-    variant: str = "feedback",
+def _unbroadcast(g: jnp.ndarray, shape, dtype) -> jnp.ndarray:
+    """Reduce a cotangent back to a (possibly broadcast) operand's shape."""
+    if g.shape != shape:
+        lead = g.ndim - len(shape)
+        g = jnp.sum(g, axis=tuple(range(lead))) if lead else g
+        keep = tuple(i for i, (a, b) in enumerate(zip(g.shape, shape))
+                     if a != b)
+        if keep:
+            g = jnp.sum(g, axis=keep, keepdims=True)
+    return g.astype(dtype)
+
+
+def _reciprocal_impl(
+    d: jnp.ndarray, p: int, iters: int, variant: str
 ) -> jnp.ndarray:
     """Goldschmidt reciprocal 1/d, any sign/scale; matches d's dtype."""
     dtype = d.dtype
-    if iters is None:
-        iters = iters_for(p, _target_bits(dtype))
     d32 = d.astype(jnp.float32)
     sign = jnp.where(jnp.signbit(d32), -1.0, 1.0).astype(jnp.float32)
     mag = jnp.abs(d32)
@@ -188,15 +213,44 @@ def gs_reciprocal(
     return out.astype(dtype)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _reciprocal(d, p, iters, variant):
+    return _reciprocal_impl(d, p, iters, variant)
+
+
+def _reciprocal_fwd(d, p, iters, variant):
+    q = _reciprocal_impl(d, p, iters, variant)
+    return q, q  # the quotient is the whole residual
+
+
+def _reciprocal_bwd(p, iters, variant, q, g):
+    q32 = q.astype(jnp.float32)
+    return ((-(q32 * q32) * g.astype(jnp.float32)).astype(q.dtype),)
+
+
+_reciprocal.defvjp(_reciprocal_fwd, _reciprocal_bwd)
+
+
 @partial(jax.jit, static_argnames=("p", "iters", "variant"))
-def gs_divide(
-    n: jnp.ndarray,
+def gs_reciprocal(
     d: jnp.ndarray,
     *,
     p: int = DEFAULT_P,
     iters: int | None = None,
     variant: str = "feedback",
 ) -> jnp.ndarray:
+    """Goldschmidt reciprocal 1/d, any sign/scale; matches d's dtype.
+
+    Differentiable: VJP is ``-q²·ḡ`` on the saved quotient (module
+    docstring), not autodiff through the bit peel.
+    """
+    if iters is None:
+        iters = iters_for(p, _target_bits(d.dtype))
+    return _reciprocal(d, p, iters, variant)
+
+
+def _divide_impl(n: jnp.ndarray, d: jnp.ndarray, p: int, iters: int,
+                 variant: str) -> jnp.ndarray:
     """Goldschmidt division n/d.
 
     Faithful to the paper's Fig. 1 dataflow: q1 = N·K1 (MULT 1) runs against
@@ -205,8 +259,6 @@ def gs_divide(
     the convergent factors K_i multiply q directly (no final extra multiply).
     """
     dtype = jnp.result_type(n, d)
-    if iters is None:
-        iters = iters_for(p, _target_bits(dtype))
     n32, d32 = n.astype(jnp.float32), d.astype(jnp.float32)
     sign = jnp.where(jnp.signbit(n32) ^ jnp.signbit(d32), -1.0, 1.0).astype(
         jnp.float32)
@@ -236,18 +288,50 @@ def gs_divide(
     return out.astype(dtype)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _divide(n, d, p, iters, variant):
+    return _divide_impl(n, d, p, iters, variant)
+
+
+def _divide_fwd(n, d, p, iters, variant):
+    q = _divide_impl(n, d, p, iters, variant)
+    return q, (q, n, d)
+
+
+def _divide_bwd(p, iters, variant, res, g):
+    # One backward Goldschmidt pass recovers 1/d (the flash-attention
+    # recomputation idea applied to division): dn = ḡ/d, dd = -ḡ·q/d.
+    q, n, d = res
+    inv_d = _reciprocal_impl(d.astype(jnp.float32), p, iters, variant)
+    g32 = g.astype(jnp.float32)
+    dn = g32 * inv_d
+    dd = -g32 * q.astype(jnp.float32) * inv_d
+    return (_unbroadcast(dn, n.shape, n.dtype),
+            _unbroadcast(dd, d.shape, d.dtype))
+
+
+_divide.defvjp(_divide_fwd, _divide_bwd)
+
+
 @partial(jax.jit, static_argnames=("p", "iters", "variant"))
-def gs_rsqrt(
-    x: jnp.ndarray,
+def gs_divide(
+    n: jnp.ndarray,
+    d: jnp.ndarray,
     *,
     p: int = DEFAULT_P,
     iters: int | None = None,
     variant: str = "feedback",
 ) -> jnp.ndarray:
+    """Goldschmidt division n/d (differentiable; see module docstring)."""
+    if iters is None:
+        iters = iters_for(p, _target_bits(jnp.result_type(n, d)))
+    return _divide(n, d, p, iters, variant)
+
+
+def _rsqrt_impl(x: jnp.ndarray, p: int, iters: int, variant: str
+                ) -> jnp.ndarray:
     """Goldschmidt 1/sqrt(x) (the [4] square-root-reciprocal variant)."""
     dtype = x.dtype
-    if iters is None:
-        iters = iters_for(p, _target_bits(dtype))
     x32 = x.astype(jnp.float32)
     m, e = _normalize(x32)  # m ∈ [1,2)
     # Force even exponent: m' ∈ [1,4), e' even → sqrt(2^e') = 2^(e'/2).
@@ -262,18 +346,42 @@ def gs_rsqrt(
     return out.astype(dtype)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _rsqrt(x, p, iters, variant):
+    return _rsqrt_impl(x, p, iters, variant)
+
+
+def _rsqrt_fwd(x, p, iters, variant):
+    q = _rsqrt_impl(x, p, iters, variant)
+    return q, q
+
+
+def _rsqrt_bwd(p, iters, variant, q, g):
+    q32 = q.astype(jnp.float32)
+    return ((-0.5 * q32 * q32 * q32 * g.astype(jnp.float32)).astype(q.dtype),)
+
+
+_rsqrt.defvjp(_rsqrt_fwd, _rsqrt_bwd)
+
+
 @partial(jax.jit, static_argnames=("p", "iters", "variant"))
-def gs_sqrt(
+def gs_rsqrt(
     x: jnp.ndarray,
     *,
     p: int = DEFAULT_P,
     iters: int | None = None,
     variant: str = "feedback",
 ) -> jnp.ndarray:
+    """Goldschmidt 1/sqrt(x) (differentiable: VJP = -q³/2 on the output)."""
+    if iters is None:
+        iters = iters_for(p, _target_bits(x.dtype))
+    return _rsqrt(x, p, iters, variant)
+
+
+def _sqrt_impl(x: jnp.ndarray, p: int, iters: int, variant: str
+               ) -> jnp.ndarray:
     """Goldschmidt sqrt(x): the g-sequence of the same iteration."""
     dtype = x.dtype
-    if iters is None:
-        iters = iters_for(p, _target_bits(dtype))
     x32 = x.astype(jnp.float32)
     m, e = _normalize(x32)
     odd = (e % 2) != 0
@@ -297,3 +405,37 @@ def gs_sqrt(
     out = jnp.where(jnp.isinf(x32), jnp.inf, out)
     out = jnp.where((x32 < 0.0) | jnp.isnan(x32), jnp.nan, out)
     return out.astype(dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _sqrt(x, p, iters, variant):
+    return _sqrt_impl(x, p, iters, variant)
+
+
+def _sqrt_fwd(x, p, iters, variant):
+    q = _sqrt_impl(x, p, iters, variant)
+    return q, q
+
+
+def _sqrt_bwd(p, iters, variant, q, g):
+    # d sqrt(x) = 1/(2·sqrt(x)) = (1/q)/2: one backward Goldschmidt pass
+    # on the saved root — no hardware divide in the backward either.
+    inv = _reciprocal_impl(q.astype(jnp.float32), p, iters, variant)
+    return ((0.5 * inv * g.astype(jnp.float32)).astype(q.dtype),)
+
+
+_sqrt.defvjp(_sqrt_fwd, _sqrt_bwd)
+
+
+@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+def gs_sqrt(
+    x: jnp.ndarray,
+    *,
+    p: int = DEFAULT_P,
+    iters: int | None = None,
+    variant: str = "feedback",
+) -> jnp.ndarray:
+    """Goldschmidt sqrt(x) (differentiable; see module docstring)."""
+    if iters is None:
+        iters = iters_for(p, _target_bits(x.dtype))
+    return _sqrt(x, p, iters, variant)

@@ -12,6 +12,13 @@ well under 8 MB of VMEM (block_rows = 64 -> 4 MB one-hot + ~200 KB tiles).
 Domain: normal f32 magnitudes (biased exponent in [1, 253]); zeros map to
 ±inf, inf to ±0, nan propagates; results whose exponent underflows flush
 to zero (TPU FTZ).  Subnormal *inputs* are treated as zero.
+
+Backward (``custom_vjp``): the only residual is the kernel's own output
+``q`` — the converged quotient is treated as an exact reciprocal
+(arXiv:2305.03728's error analysis: correctly rounded after the
+predetermined iteration count), so ``dx = -q²·ḡ``.  Nothing
+differentiates through the ``fori_loop`` or the bitcast field peel
+(which would yield silent zeros).
 """
 
 from __future__ import annotations
@@ -51,20 +58,7 @@ def _kernel(x_ref, tab_ref, o_ref, *, p: int, iters: int, variant: str):
     o_ref[...] = out
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("p", "iters", "variant", "block_rows", "interpret"),
-)
-def gs_recip(
-    x: jnp.ndarray,
-    *,
-    p: int = common.DEFAULT_P,
-    iters: int = 2,
-    variant: str = "feedback",
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
-) -> jnp.ndarray:
-    """Reciprocal of x (any shape), elementwise, via the Pallas datapath."""
+def _run(x, *, p, iters, variant, block_rows, interpret):
     orig_shape, orig_dtype = x.shape, x.dtype
     flat = x.astype(jnp.float32).reshape(-1)
     n = flat.shape[0]
@@ -87,3 +81,40 @@ def gs_recip(
         interpret=interpret,
     )(x2, table)
     return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _recip(x, p, iters, variant, block_rows, interpret):
+    return _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+                interpret=interpret)
+
+
+def _recip_fwd(x, p, iters, variant, block_rows, interpret):
+    q = _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+             interpret=interpret)
+    return q, q
+
+
+def _recip_bwd(p, iters, variant, block_rows, interpret, q, g):
+    q32 = q.astype(jnp.float32)
+    return ((-(q32 * q32) * g.astype(jnp.float32)).astype(q.dtype),)
+
+
+_recip.defvjp(_recip_fwd, _recip_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "iters", "variant", "block_rows", "interpret"),
+)
+def gs_recip(
+    x: jnp.ndarray,
+    *,
+    p: int = common.DEFAULT_P,
+    iters: int = 2,
+    variant: str = "feedback",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Reciprocal of x (any shape), elementwise, via the Pallas datapath."""
+    return _recip(x, p, iters, variant, block_rows, interpret)

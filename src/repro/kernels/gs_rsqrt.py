@@ -6,6 +6,16 @@ feedback/pipelined datapath selection as :mod:`gs_recip`.  §IV of the paper
 notes the hardware reduction leaves these variants intact — the same single
 multiplier pair serves them with a different complement step
 (``0.5 - g*h`` instead of ``2 - r``).
+
+Backward (``custom_vjp``): rules run on saved forward outputs, never
+through the ``fori_loop``/bit-peel:
+
+* ``gs_rsqrt``: residual is its own output ``y``; ``dx = -y³/2 · ḡ``.
+* ``gs_sqrt``: the coupled iteration already produces the rsqrt in its
+  ``h`` register, so the differentiated forward emits it as a second
+  kernel output and saves it — ``dx = rsqrt(x)/2 · ḡ`` with zero extra
+  backward compute (the paper's reuse-the-datapath move applied to
+  autodiff).  The undifferentiated primal keeps the single-output call.
 """
 
 from __future__ import annotations
@@ -21,7 +31,7 @@ from repro.kernels import common
 DEFAULT_BLOCK_ROWS = 64
 
 
-def _kernel(x_ref, tab_ref, o_ref, *, p: int, iters: int, variant: str,
+def _kernel(x_ref, tab_ref, *out_refs, p: int, iters: int, variant: str,
             mode: str):
     x = x_ref[...]
     table = tab_ref[...]
@@ -33,24 +43,24 @@ def _kernel(x_ref, tab_ref, o_ref, *, p: int, iters: int, variant: str,
     m = jnp.where(odd, m * 2.0, m)
     Eh = jnp.where(odd, (E - 1) // 2, E // 2)  # E/2 after evening, exact
     g, h = common.gs_rsqrt_core(m, table, p=p, iters=iters, variant=variant)
-    if mode == "rsqrt":
-        val = 2.0 * h  # -> 1/sqrt(m)
-        scale = common.pow2_from_biased(127 - Eh)  # 2^(-E/2)
-    else:
-        val = g  # -> sqrt(m)
-        scale = common.pow2_from_biased(127 + Eh)  # 2^(E/2)
-    out = val * scale
+    rs = (2.0 * h) * common.pow2_from_biased(127 - Eh)  # -> 1/sqrt(x)
+    sq = g * common.pow2_from_biased(127 + Eh)          # -> sqrt(x)
     zero_in = e == 0
     inf_in = (e == 255) & (mant == 0)
     nan_in = ((e == 255) & (mant != 0)) | (x < 0.0)
+    rs = jnp.where(zero_in, jnp.inf, rs)
+    rs = jnp.where(inf_in, 0.0, rs)
+    rs = jnp.where(nan_in, jnp.nan, rs)
+    sq = jnp.where(zero_in, 0.0, sq)
+    sq = jnp.where(inf_in, jnp.inf, sq)
+    sq = jnp.where(nan_in, jnp.nan, sq)
     if mode == "rsqrt":
-        out = jnp.where(zero_in, jnp.inf, out)
-        out = jnp.where(inf_in, 0.0, out)
-    else:
-        out = jnp.where(zero_in, 0.0, out)
-        out = jnp.where(inf_in, jnp.inf, out)
-    out = jnp.where(nan_in, jnp.nan, out)
-    o_ref[...] = out
+        out_refs[0][...] = rs
+    elif mode == "sqrt":
+        out_refs[0][...] = sq
+    else:  # "sqrt_both": sqrt + its rsqrt co-output (the h register)
+        out_refs[0][...] = sq
+        out_refs[1][...] = rs
 
 
 def _run(x, *, p, iters, variant, block_rows, interpret, mode):
@@ -63,6 +73,8 @@ def _run(x, *, p, iters, variant, block_rows, interpret, mode):
     flat = jnp.pad(flat, (0, rows_pad * cols - n), constant_values=1.0)
     x2 = flat.reshape(rows_pad, cols)
     table = common.rom_table_rsqrt(p)
+    n_out = 2 if mode == "sqrt_both" else 1
+    out_sds = jax.ShapeDtypeStruct((rows_pad, cols), jnp.float32)
     out = pl.pallas_call(
         functools.partial(_kernel, p=p, iters=iters, variant=variant, mode=mode),
         grid=(rows_pad // block_rows,),
@@ -70,11 +82,56 @@ def _run(x, *, p, iters, variant, block_rows, interpret, mode):
             pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
             pl.BlockSpec((1 << p, 1), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows_pad, cols), jnp.float32),
+        out_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))] * n_out
+        if n_out > 1 else pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=[out_sds] * n_out if n_out > 1 else out_sds,
         interpret=interpret,
     )(x2, table)
-    return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)
+    outs = out if n_out > 1 else (out,)
+    trimmed = tuple(
+        o.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype) for o in outs
+    )
+    return trimmed if n_out > 1 else trimmed[0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _rsqrt(x, p, iters, variant, block_rows, interpret):
+    return _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+                interpret=interpret, mode="rsqrt")
+
+
+def _rsqrt_fwd(x, p, iters, variant, block_rows, interpret):
+    y = _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+             interpret=interpret, mode="rsqrt")
+    return y, y
+
+
+def _rsqrt_bwd(p, iters, variant, block_rows, interpret, y, g):
+    y32 = y.astype(jnp.float32)
+    return ((-0.5 * y32 * y32 * y32 * g.astype(jnp.float32)).astype(y.dtype),)
+
+
+_rsqrt.defvjp(_rsqrt_fwd, _rsqrt_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _sqrt(x, p, iters, variant, block_rows, interpret):
+    return _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+                interpret=interpret, mode="sqrt")
+
+
+def _sqrt_fwd(x, p, iters, variant, block_rows, interpret):
+    y, rs = _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+                 interpret=interpret, mode="sqrt_both")
+    return y, rs
+
+
+def _sqrt_bwd(p, iters, variant, block_rows, interpret, rs, g):
+    return ((0.5 * rs.astype(jnp.float32) * g.astype(jnp.float32))
+            .astype(rs.dtype),)
+
+
+_sqrt.defvjp(_sqrt_fwd, _sqrt_bwd)
 
 
 @functools.partial(
@@ -83,8 +140,7 @@ def _run(x, *, p, iters, variant, block_rows, interpret, mode):
 def gs_rsqrt(x, *, p: int = common.DEFAULT_P, iters: int = 2,
              variant: str = "feedback", block_rows: int = DEFAULT_BLOCK_ROWS,
              interpret: bool = True):
-    return _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
-                interpret=interpret, mode="rsqrt")
+    return _rsqrt(x, p, iters, variant, block_rows, interpret)
 
 
 @functools.partial(
@@ -93,5 +149,4 @@ def gs_rsqrt(x, *, p: int = common.DEFAULT_P, iters: int = 2,
 def gs_sqrt(x, *, p: int = common.DEFAULT_P, iters: int = 2,
             variant: str = "feedback", block_rows: int = DEFAULT_BLOCK_ROWS,
             interpret: bool = True):
-    return _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
-                interpret=interpret, mode="sqrt")
+    return _sqrt(x, p, iters, variant, block_rows, interpret)

@@ -9,6 +9,11 @@ exp(-inf)=0 to the sum and the reciprocal operates on the true row sum.
 The full row must fit in VMEM: rows up to ~16k f32 columns are fine
 (block_rows * cols * 4B + one-hot (block_rows,128) ~ «8 MB for
 block_rows=8, cols=16384).
+
+Backward (``custom_vjp``): softmax is self-residual — the saved output
+``y`` gives ``dx = y ⊙ (ḡ - Σ_col y·ḡ)``, multiplies and a row sum only
+(division-free, like the forward).  No differentiation through the
+Goldschmidt ``fori_loop``.
 """
 
 from __future__ import annotations
@@ -32,19 +37,7 @@ def _kernel(x_ref, tab_ref, o_ref, *, p, iters, variant):
     o_ref[...] = (e * inv).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("p", "iters", "variant", "block_rows", "interpret")
-)
-def gs_softmax(
-    x: jnp.ndarray,
-    *,
-    p: int = common.DEFAULT_P,
-    iters: int = 2,
-    variant: str = "feedback",
-    block_rows: int = 8,
-    interpret: bool = True,
-) -> jnp.ndarray:
-    """Softmax over the last axis of x (any leading shape)."""
+def _run(x, *, p, iters, variant, block_rows, interpret):
     orig_shape, orig_dtype = x.shape, x.dtype
     cols = orig_shape[-1]
     rows = 1
@@ -71,3 +64,41 @@ def gs_softmax(
         interpret=interpret,
     )(x2, table)
     return out[:rows, :cols].reshape(orig_shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _softmax(x, p, iters, variant, block_rows, interpret):
+    return _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+                interpret=interpret)
+
+
+def _softmax_fwd(x, p, iters, variant, block_rows, interpret):
+    y = _run(x, p=p, iters=iters, variant=variant, block_rows=block_rows,
+             interpret=interpret)
+    return y, y
+
+
+def _softmax_bwd(p, iters, variant, block_rows, interpret, y, g):
+    y32 = y.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    dot = jnp.sum(y32 * g32, axis=-1, keepdims=True)
+    return ((y32 * (g32 - dot)).astype(y.dtype),)
+
+
+_softmax.defvjp(_softmax_fwd, _softmax_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "iters", "variant", "block_rows", "interpret")
+)
+def gs_softmax(
+    x: jnp.ndarray,
+    *,
+    p: int = common.DEFAULT_P,
+    iters: int = 2,
+    variant: str = "feedback",
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Softmax over the last axis of x (any leading shape)."""
+    return _softmax(x, p, iters, variant, block_rows, interpret)

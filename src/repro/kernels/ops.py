@@ -13,6 +13,15 @@ or ``tuning.enable_tuning()`` — the persisted autotune cache for this
 ``interpret`` defaults to True because this container is CPU-only; on a
 real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
 ``interpret=False``) and the same BlockSpecs compile via Mosaic.
+
+All ops are differentiable: each kernel carries a ``custom_vjp`` whose
+rule runs on saved forward outputs (quotient / rsqrt / softmax /
+(m, l) attention statistics) instead of autodiffing the Goldschmidt
+``fori_loop`` or the bitcast field peel, so ``jax.grad`` through
+``kernel_impl='pallas'`` matches the jnp reference path.  Flash
+attention's backward tile shapes resolve through the dispatch under the
+``flash_attention_bwd`` registry entry (override with
+``block_q_bwd``/``block_kv_bwd``).
 """
 
 from __future__ import annotations

@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.core.goldschmidt import iters_for
 from repro.kernels import common
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_bwd_bench)
 from repro.kernels.gs_adam import gs_adam_update
 from repro.kernels.gs_recip import gs_recip
 from repro.kernels.gs_rmsnorm import gs_rmsnorm
@@ -103,6 +104,13 @@ def _args_flash(shape, dtype):
     r = np.random.RandomState(4)
     mk = lambda: jnp.asarray(r.randn(b, h, s, d).astype(np.float32)).astype(dtype)
     return (mk(), mk(), mk()), {"causal": True}
+
+
+def _args_flash_bwd(shape, dtype):
+    (q, k, v), kw = _args_flash(shape, dtype)
+    r = np.random.RandomState(5)
+    do = jnp.asarray(r.randn(*shape).astype(np.float32)).astype(dtype)
+    return (q, k, v, do), kw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +213,24 @@ REGISTRY: Dict[str, KernelSpec] = {
                 "interpret": _interpret_axis,
             },
             make_args=_args_flash,
+            supports=lambda shape: len(shape) == 4,
+        ),
+        # Backward tile shapes for the flash-attention vjp (dq + dk/dv
+        # kernel pair), resolved by the custom_vjp's bwd rule.  Only the
+        # tile axes are swept: the backward's Goldschmidt variant/iters
+        # always follow the forward call (policy-pinned nondiff args), so
+        # tuning them here could never apply at dispatch — they remain
+        # kwargs on flash_attention_bwd_bench for standalone experiments.
+        KernelSpec(
+            name="flash_attention_bwd",
+            fn=flash_attention_bwd_bench,
+            defaults={"block_q": 128, "block_kv": 128, "interpret": None},
+            axes={
+                "block_q": _seq_block_axis,
+                "block_kv": _seq_block_axis,
+                "interpret": _interpret_axis,
+            },
+            make_args=_args_flash_bwd,
             supports=lambda shape: len(shape) == 4,
         ),
     )

@@ -398,6 +398,30 @@ def analyze_hlo_text(text: str) -> Accum:
     return analyze_computation(entry, comps)
 
 
+def xla_cost(compiled) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()`` as one flat dict.
+
+    jax has returned either a dict or a list of per-computation dicts (one
+    per compiled executable) from ``cost_analysis()`` depending on
+    version; indexing the list with a string key is the seed's
+    ``TypeError: list indices must be integers or slices, not str``.
+    Merge by summing numeric values so callers always see
+    ``{"flops": ..., "bytes accessed": ...}``; returns ``{}`` when the
+    backend provides nothing.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    merged: Dict[str, float] = {}
+    for entry in cost:
+        for key, val in (entry or {}).items():
+            if isinstance(val, (int, float)):
+                merged[key] = merged.get(key, 0.0) + float(val)
+    return merged
+
+
 def roofline_terms(acc: Accum, *, peak_flops: float, hbm_bw: float,
                    ici_bw: float,
                    xla_flops_once: float = 0.0,

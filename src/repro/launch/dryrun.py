@@ -80,7 +80,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = analysis.xla_cost(compiled)
     hlo = compiled.as_text()
     acc = analysis.analyze_hlo_text(hlo)
     terms = analysis.roofline_terms(

@@ -124,7 +124,7 @@ def main():
         print(f"{v/2**30:9.2f} GiB x{coll_n[(op, nm)]:<7.0f} {op:18s} {nm}")
 
     acc = analysis.analyze_hlo_text(txt)
-    cost = compiled.cost_analysis() or {}
+    cost = analysis.xla_cost(compiled)
     from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
     terms = analysis.roofline_terms(

@@ -62,12 +62,19 @@ def main() -> None:
     ap.add_argument("--straggle-from", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--kernel-impl", default=None, choices=("jnp", "pallas"),
+                    help="override cfg.kernel_impl: 'pallas' trains through "
+                         "the fused kernels (custom_vjp backward)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
+    if args.kernel_impl is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, kernel_impl=args.kernel_impl)
     mesh = parse_mesh(args.mesh)
     dp = shr.dp_axes(mesh, args.batch) if mesh else ()
     hp = TrainHParams(peak_lr=args.lr, warmup=min(20, args.steps // 4),

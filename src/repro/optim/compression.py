@@ -7,9 +7,9 @@ int32), dequantize with the psum'd per-pod scales, and keep the local
 quantization residual as error feedback added to the next step's gradient
 (EF14 — convergence-safe for SGD-family updates).
 
-Implemented as a *partial-auto* ``jax.shard_map``: only 'pod' is manual —
-the FSDP/TP axes stay under GSPMD inside, so this wrapper composes with
-the normal sharded train step.  Cross-pod gradient bytes drop 4x
+Implemented as a ``shard_map`` whose specs reference only 'pod' (see the
+note in :func:`compressed_grad_fn` on why this jax version runs it fully
+manual rather than partial-auto).  Cross-pod gradient bytes drop 4x
 (fp32->int8) minus one scalar per leaf.
 """
 
@@ -20,6 +20,7 @@ from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -66,11 +67,19 @@ def compressed_grad_fn(
     their leading axis.  Only 'pod' is manual; 'data'/'model' stay GSPMD.
     """
 
+    # NOTE on manual-axis scope: the seed called ``jax.shard_map`` with
+    # ``axis_names={axis}`` / ``check_vma`` — kwargs from a newer jax; this
+    # jax spells it ``jax.experimental.shard_map.shard_map`` with
+    # ``check_rep``, and its partial-manual form (``auto=``) trips an XLA
+    # SPMD partitioner check on the CPU backend.  So the wrapper runs
+    # fully manual: unreferenced mesh axes see replicated operands inside,
+    # which is exact for this wrapper (the pod-mean is computed locally
+    # per device after the int8 all-gather).
     def fn(params, batch, ef):
         @partial(
-            jax.shard_map, mesh=mesh, axis_names={axis},
+            shard_map, mesh=mesh,
             in_specs=(P(), P(axis), P()), out_specs=(P(), P(), P()),
-            check_vma=False,
+            check_rep=False,
         )
         def run(params, batch, ef):
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)

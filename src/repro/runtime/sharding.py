@@ -71,6 +71,19 @@ _MOE_RULES = {  # rank-3 expert-stacked weights: EP over 'model'
 }
 
 
+def abstract_mesh(axis_sizes: Tuple[int, ...],
+                  axis_names: Tuple[str, ...]) -> "jax.sharding.AbstractMesh":
+    """Device-free mesh for rule/divisibility checks.
+
+    ``jax.sharding.AbstractMesh`` wants one ``((name, size), ...)`` shape
+    tuple, not the ``(sizes, names)`` pair ``Mesh`` takes — passing sizes
+    positionally lands a bare int where an iterable is expected
+    (``TypeError: 'int' object is not iterable``).  Single home for the
+    construction so callers can't get the pairing wrong.
+    """
+    return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
 def _path_names(path) -> Tuple[str, ...]:
     names = []
     for k in path:

@@ -49,36 +49,42 @@ class TestRules:
 
 
 class TestDivisibilityFilter:
-    """AbstractMesh carries shapes without needing real devices."""
+    """AbstractMesh carries shapes without needing real devices (built via
+    shr.abstract_mesh — the raw constructor wants ((name, size), ...))."""
 
     def test_minicpm_heads_fall_back_to_replicated(self):
         """36 heads on a 16-wide model axis: dropped, not padded."""
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh = shr.abstract_mesh((16, 16), ("data", "model"))
         spec = shr.filter_pspec(P(None, "model", None), mesh, (2304, 32, 64))
         assert spec == P(None, "model", None)  # 32 % 16 == 0
         spec2 = shr.filter_pspec(P(None, "model", None), mesh, (2304, 36, 64))
         assert spec2 == P(None, None, None)  # 36 % 16 != 0 -> replicated
 
     def test_absent_axis_dropped(self):
-        mesh = jax.sharding.AbstractMesh((2,), ("data",))
+        mesh = shr.abstract_mesh((2,), ("data",))
         spec = shr.filter_pspec(P("data", "model"), mesh, (8, 8))
         assert spec == P("data", None)
 
     def test_vocab_not_divisible(self):
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh = shr.abstract_mesh((16, 16), ("data", "model"))
         # minicpm vocab 122753 is prime-ish: both axes dropped
         spec = shr.filter_pspec(P("model", "data"), mesh, (122753, 2304))
         assert spec == P(None, "data")
 
     def test_dp_axes_divisibility(self):
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh = shr.abstract_mesh((16, 16), ("data", "model"))
         assert shr.dp_axes(mesh, 32) == ("data",)
         assert shr.dp_axes(mesh, 7) == ()
-        mesh2 = jax.sharding.AbstractMesh((2, 16, 16),
-                                          ("pod", "data", "model"))
+        mesh2 = shr.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
         assert shr.dp_axes(mesh2, 256) == ("pod", "data")
         assert shr.dp_axes(mesh2, 2) == ("pod",)
         assert shr.dp_axes(mesh2, 1) == ()
+
+    def test_abstract_mesh_shape(self):
+        """Regression: the helper pairs names with sizes (seed bug passed
+        bare ints where Mesh expects an iterable spec)."""
+        mesh = shr.abstract_mesh((4, 2), ("data", "model"))
+        assert dict(mesh.shape) == {"data": 4, "model": 2}
 
 
 class TestActivationConstraints:
