@@ -3,15 +3,24 @@
 On this CPU container interpret-mode timing is NOT TPU-representative;
 the benchmark's real output is the max-abs-error column versus the jnp
 oracle across a shape sweep — the correctness half of the kernel claim.
+
+:func:`records` is the structured form behind ``BENCH_kernels.json``
+(``benchmarks/run.py --smoke``): per kernel × dtype × impl (pallas / jnp)
+× precision policy (``seed`` = the fixed (7, 2) literals vs ``dtype`` =
+the precision_policy pair) it reports µs/call, the max error against an
+exact oracle, and the dtype's error bound — the rows CI's bench-smoke
+job gates on.
 """
 
 from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.goldschmidt import DEFAULT_P, precision_policy, target_bits_for
 from repro.kernels import ops, ref
 
 
@@ -125,6 +134,157 @@ def _tuned_vs_default():
             os.environ.pop("REPRO_TUNE_CACHE", None)
         else:
             os.environ["REPRO_TUNE_CACHE"] = prev_path
+    return out
+
+
+# ---------------------------------------------------------------------------
+# structured records for BENCH_kernels.json (run.py --smoke / CI bench gate)
+# ---------------------------------------------------------------------------
+
+# Max-err bound per (kernel, dtype): ~4x the measured seed-state error,
+# rounded up to a power of two — tight enough that an accuracy regression
+# past the dtype's budget (a broken table, a dropped iteration) trips the
+# CI gate, loose enough to absorb FMA-contraction jitter.  recip/rsqrt are
+# relative errors; the fused kernels are absolute vs an exact oracle.
+ERR_BOUNDS = {
+    ("gs_recip", "float32"): 2.0 ** -20,
+    ("gs_recip", "bfloat16"): 2.0 ** -7,
+    ("gs_rsqrt", "float32"): 2.0 ** -20,
+    ("gs_rsqrt", "bfloat16"): 2.0 ** -7,
+    ("gs_softmax", "float32"): 2.0 ** -18,
+    ("gs_softmax", "bfloat16"): 2.0 ** -6,
+    ("gs_rmsnorm", "float32"): 2.0 ** -15,
+    ("gs_rmsnorm", "bfloat16"): 2.0 ** -4,
+    ("flash_attention", "float32"): 2.0 ** -15,
+    ("flash_attention", "bfloat16"): 2.0 ** -4,
+    ("gs_adam", "float32"): 2.0 ** -18,
+}
+
+
+def _time(fn, *, repeats: int) -> float:
+    jax.block_until_ready(fn())  # warmup/compile outside the window
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts) * 1e6)
+
+
+def _bench_cases(smoke: bool):
+    """(kernel, shape, make-args, pallas fn, jnp fn, err fn) per kernel."""
+    r = np.random.RandomState(42)
+    s = 128 if smoke else 256
+
+    def f32(a):
+        return np.asarray(a, np.float32)
+
+    pos = np.abs(r.randn(s, 128)).astype(np.float32) + 0.1
+    sm = (r.randn(16, 384) * 4).astype(np.float32)
+    nx = r.randn(32, 512).astype(np.float32)
+    ng = r.randn(512).astype(np.float32)
+    q = r.randn(1, 4, s, 64).astype(np.float32)
+    kv = r.randn(1, 2, s, 64).astype(np.float32)
+    ap = r.randn(2048).astype(np.float32)
+    ag = r.randn(2048).astype(np.float32)
+    az = np.zeros(2048, np.float32)
+
+    return [
+        ("gs_recip", (pos,),
+         ops.gs_recip, ref.reciprocal,
+         lambda got, args: np.abs(f32(got) * f32(args[0]) - 1.0).max()),
+        ("gs_rsqrt", (pos,),
+         ops.gs_rsqrt, ref.rsqrt,
+         lambda got, args: np.abs(
+             f32(got) * np.sqrt(f32(args[0]).astype(np.float64)) - 1.0
+         ).max()),
+        ("gs_softmax", (sm,),
+         ops.gs_softmax, ref.softmax,
+         lambda got, args: np.abs(
+             f32(got) - f32(ref.softmax_exact(jnp.asarray(args[0])))
+         ).max()),
+        ("gs_rmsnorm", (nx, ng),
+         ops.gs_rmsnorm, ref.rmsnorm,
+         lambda got, args: np.abs(
+             f32(got) - f32(ref.rmsnorm_exact(*map(jnp.asarray, args)))
+         ).max()),
+        ("flash_attention", (q, kv, kv),
+         ops.flash_attention,
+         _flash_chunked_gs,
+         lambda got, args: np.abs(
+             f32(got) - f32(ref.attention_exact(
+                 *map(jnp.asarray, args), causal=True))
+         ).max()),
+        ("gs_adam", (ap, ag, az, np.abs(az)),
+         lambda p_, g_, m_, v_, **kw: ops.gs_adam_update(
+             p_, g_, m_, v_, jnp.asarray(1), lr=1e-3, **kw)[0],
+         lambda p_, g_, m_, v_: ref.adam_update(
+             p_, g_, m_, v_, lr=1e-3, step=1)[0],
+         lambda got, args: np.abs(
+             f32(got) - f32(ref.adam_update_exact(
+                 *map(jnp.asarray, args), lr=1e-3, step=1)[0])
+         ).max()),
+    ]
+
+
+def _flash_chunked_gs(q, k, v):
+    """jnp reference for the flash kernel rows: the chunked online-softmax
+    attention with the dtype-derived Goldschmidt epilogue (a real GS path,
+    not the exact oracle — its error row is a meaningful baseline)."""
+    from repro.core.policy import GS_FEEDBACK
+    from repro.layers.attention import flash_chunked
+
+    t = lambda a: a.transpose(0, 2, 1, 3)
+    return t(flash_chunked(t(q), t(k), t(v), policy=GS_FEEDBACK,
+                           causal=True, q_block=64, kv_block=64))
+
+
+def records(smoke: bool = False):
+    """The BENCH_kernels.json rows: every kernel at fp32 and bf16, pallas
+    and jnp impls, under the fixed seed literals (p=7, iters=2) and the
+    dtype-derived precision policy."""
+    repeats = 1 if smoke else 3
+    out = []
+    for kernel, args_np, pallas_fn, jnp_fn, err_fn in _bench_cases(smoke):
+        dtypes = ("float32",) if kernel == "gs_adam" else (
+            "float32", "bfloat16")
+        for dtype_name in dtypes:
+            dtype = jnp.dtype(dtype_name)
+            # gs_adam's jnp reference is policy-free; flash's jnp ref is
+            # the exact oracle — only the pallas impl takes (p, iters).
+            args = tuple(
+                jnp.asarray(a).astype(dtype)
+                if a.dtype == np.float32 and a.ndim > 0 else jnp.asarray(a)
+                for a in args_np
+            )
+            seed_cfg = {"p": DEFAULT_P, "iters": 2}
+            pol_cfg = dict(zip(("p", "iters"),
+                               precision_policy(dtype)))
+            bound = ERR_BOUNDS[(kernel, dtype_name)]
+            for policy_name, cfg in (("seed", seed_cfg), ("dtype", pol_cfg)):
+                got = pallas_fn(*args, **cfg)
+                err = float(err_fn(got, args))
+                us = _time(lambda: pallas_fn(*args, **cfg), repeats=repeats)
+                out.append({
+                    "kernel": kernel, "dtype": dtype_name, "impl": "pallas",
+                    "policy": policy_name, "config": cfg,
+                    "us_per_call": round(us, 1), "max_err": err,
+                    "err_bound": bound, "ok": bool(err <= bound),
+                    "target_bits": target_bits_for(dtype),
+                })
+            # jnp reference rows: the GS jnp paths — ref oracles pin the
+            # (7, 2) seed literals; the chunked flash reference derives
+            # its policy from the operand dtype.
+            us = _time(lambda: jnp_fn(*args), repeats=repeats)
+            err = float(err_fn(jnp_fn(*args), args))
+            out.append({
+                "kernel": kernel, "dtype": dtype_name, "impl": "jnp",
+                "policy": "dtype" if kernel == "flash_attention" else "seed",
+                "config": {},
+                "us_per_call": round(us, 1), "max_err": err,
+                "err_bound": bound, "ok": bool(err <= bound),
+                "target_bits": target_bits_for(dtype),
+            })
     return out
 
 

@@ -3,25 +3,80 @@ framework roofline summary.  Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # all sections
   PYTHONPATH=src python -m benchmarks.run --only cycles
+
+``--smoke`` runs the kernel sweep only (1 timing repeat) and writes the
+structured per-kernel records — µs/call + max-err, pallas vs jnp, the
+fixed seed (7, 2) literals vs the dtype-derived precision policy — to
+``BENCH_kernels.json`` (override with ``--json PATH``).  ``--check``
+exits non-zero if any kernel's max error exceeds its dtype bound (the
+CI bench-smoke gate).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 SECTIONS = ("cycles", "accuracy", "divider", "kernels", "roofline")
+DEFAULT_JSON = "BENCH_kernels.json"
+
+
+def _kernel_records(smoke: bool, json_path: str) -> list:
+    from benchmarks import bench_kernels
+
+    recs = bench_kernels.records(smoke=smoke)
+    with open(json_path, "w") as f:
+        json.dump({"smoke": smoke, "rows": recs}, f, indent=2)
+    for r in recs:
+        cfg = r["config"]
+        pi = f"p={cfg['p']}/i={cfg['iters']}" if cfg else "-"
+        print(f"{r['kernel']},{r['us_per_call']},"
+              f"\"{r['dtype']} {r['impl']} {r['policy']} {pi} "
+              f"err={r['max_err']:.2e} bound={r['err_bound']:.2e} "
+              f"ok={r['ok']}\"")
+        sys.stdout.flush()
+    print(f"# wrote {len(recs)} records to {json_path}", file=sys.stderr)
+    return recs
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=SECTIONS, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="kernel records only, 1 timing repeat, write JSON")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help=f"write kernel records here (default {DEFAULT_JSON} "
+                         "when --smoke/--check)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any kernel max-err exceeds its dtype "
+                         "bound")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    # The records flags act on the kernel sweep; an --only for a different
+    # section means there are no kernel records to write or gate.
+    records_mode = (args.smoke or args.json or args.check) and (
+        args.only in (None, "kernels"))
+    if records_mode:
+        recs = _kernel_records(args.smoke,
+                               args.json or DEFAULT_JSON)
+        if args.check:
+            bad = [r for r in recs if not r["ok"]]
+            for r in bad:
+                print(f"# REGRESSION {r['kernel']} {r['dtype']} "
+                      f"{r['impl']}/{r['policy']}: max_err={r['max_err']:.2e}"
+                      f" > bound={r['err_bound']:.2e}", file=sys.stderr)
+            if bad:
+                sys.exit(1)
+        if args.smoke:
+            return
+
     for section in SECTIONS:
         if args.only and section != args.only:
             continue
+        if section == "kernels" and records_mode:
+            continue  # the records sweep above supersedes this section
         if section == "cycles":
             from benchmarks import bench_cycles as mod
         elif section == "accuracy":

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.core.goldschmidt import target_bits_for
 from repro.core.policy import NumericsPolicy
 
 
@@ -63,9 +64,12 @@ class ArchConfig:
     dtype: str = "bfloat16"  # activation dtype
     param_dtype: str = "float32"
 
-    # numerics: the paper's technique, framework-wide
+    # numerics: the paper's technique, framework-wide.  gs_p_bits/gs_iters
+    # left None derive the (ROM width, pass count) pair per division site
+    # from the compute dtype via precision_policy: bf16 activations run
+    # seed-only (p=8, 0 passes), fp32 the paper's (7, 2).
     policy_mode: str = "gs_feedback"  # exact | gs_pipelined | gs_feedback
-    gs_p_bits: int = 7
+    gs_p_bits: Optional[int] = None  # None -> derived (seed/iteration trade)
     gs_iters: Optional[int] = None  # None -> derived from dtype
     kernel_impl: str = "jnp"  # jnp | pallas (pallas only on real TPU)
 
@@ -147,8 +151,29 @@ class ArchConfig:
         )
 
     def policy(self) -> NumericsPolicy:
+        """Model-stack policy: accuracy budget = the COMPUTE dtype.
+
+        Norms/softmax run their statistics in fp32, but the results land
+        in ``dtype``-wide activations — so the Goldschmidt sites budget
+        ``target_bits`` for that dtype, not for the fp32 intermediates
+        (bf16 models stop paying fp32-grade iteration counts).
+        """
         return NumericsPolicy(
-            mode=self.policy_mode, p_bits=self.gs_p_bits, iters=self.gs_iters
+            mode=self.policy_mode, p_bits=self.gs_p_bits, iters=self.gs_iters,
+            target_bits=target_bits_for(self.dtype),
+        )
+
+    def optimizer_policy(self) -> NumericsPolicy:
+        """Optimizer policy: accuracy budget = the PARAM/state dtype.
+
+        AdamW's divide/sqrt feed fp32 optimizer state and fp32 master
+        params; its compute dtype is ``param_dtype``, so fp32 training
+        keeps the bit-identical (7, 2) datapath while low-precision
+        parameter experiments shed passes automatically.
+        """
+        return NumericsPolicy(
+            mode=self.policy_mode, p_bits=self.gs_p_bits, iters=self.gs_iters,
+            target_bits=target_bits_for(self.param_dtype),
         )
 
 

@@ -14,6 +14,10 @@ from repro.core.goldschmidt import (  # noqa: F401
     gs_rsqrt,
     gs_sqrt,
     iters_for,
+    iters_needed,
+    precision_policy,
+    resolve_precision,
+    target_bits_for,
 )
 from repro.core.policy import (  # noqa: F401
     EXACT,

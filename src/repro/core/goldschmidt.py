@@ -43,9 +43,10 @@ entire point on TPU: the VPU has fast fused multiply-add and no divider.
 Differentiation (training support)
 ----------------------------------
 
-The forward normalize step peels IEEE-754 fields (``frexp`` / bit ops),
-which has no gradient: ``jax.grad`` through the raw iteration silently
-returns zeros for every denominator. Each public op therefore carries a
+The forward normalize step peels IEEE-754 fields (branch-free integer
+bitcast/mask/shift — see the "Fast normalize" section below), which has no
+gradient: ``jax.grad`` through the raw iteration silently returns zeros
+for every denominator. Each public op therefore carries a
 ``custom_vjp`` that treats the converged quotient as an exact result —
 justified by the parametric error analysis of Goldschmidt FP division
 (arXiv:2305.03728): after the predetermined iteration count the result is
@@ -69,11 +70,16 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import lut
 
 __all__ = [
     "iters_for",
+    "iters_needed",
+    "precision_policy",
+    "resolve_precision",
+    "target_bits_for",
     "gs_reciprocal",
     "gs_divide",
     "gs_rsqrt",
@@ -83,6 +89,9 @@ __all__ = [
 ]
 
 DEFAULT_P = 7  # table index bits; p+2 = 9-bit seed, ~2^-8 seed error
+MAX_SEED_P = 9  # widest table the seed-only search may pick (512 entries;
+# larger tables are legal via explicit p but the in-kernel one-hot ROM
+# read grows linearly with 2^p, so the policy stops trading ROM here)
 
 
 def iters_for(p: int, target_bits: int) -> int:
@@ -90,17 +99,35 @@ def iters_for(p: int, target_bits: int) -> int:
 
     Seed gives ~(p+1) bits; each pass doubles.  This is the predetermined
     count loaded into the logic-block counter (§III: "can be predetermined
-    if we are sure of how many bits accuracy we need").
+    if we are sure of how many bits accuracy we need").  A seed that
+    already covers ``target_bits`` legally yields **0** passes — the
+    seed-only datapath (ROM read, MULT 1/2, no feedback traversal).
     """
     bits = p + 1
     iters = 0
     while bits < target_bits:
         bits *= 2
         iters += 1
-    return max(iters, 1)
+    return iters
 
 
-def _target_bits(dtype) -> int:
+def iters_needed(p: int, target_bits: int) -> int:
+    """Like :func:`iters_for` but on the *measured* seed quality.
+
+    The (p+2)-bit ROM quantization costs the analytic (p+1)-th seed bit
+    (see :func:`repro.core.lut.seed_bits`), so the engineering counter
+    starts from ``seed_bits(p) == p`` good bits and doubles.
+    """
+    bits = lut.seed_bits(p)
+    iters = 0
+    while bits < target_bits:
+        bits *= 2
+        iters += 1
+    return iters
+
+
+def target_bits_for(dtype) -> int:
+    """Mantissa bits (incl. the implicit one) the output dtype can hold."""
     dtype = jnp.dtype(dtype)
     if dtype == jnp.dtype(jnp.bfloat16):
         return 8
@@ -111,10 +138,123 @@ def _target_bits(dtype) -> int:
     return 24  # float32 default
 
 
+def precision_policy(
+    dtype=None,
+    target_bits: int | None = None,
+    *,
+    p: int | None = None,
+    max_seed_p: int = MAX_SEED_P,
+) -> Tuple[int, int]:
+    """Choose the ``(p, iters)`` point on the paper's ROM-vs-multiplier curve.
+
+    The paper's whole argument is that seed width and iteration count are a
+    *joint* accuracy budget: a p-bit table plus ``i`` step-2 passes yields
+    ``seed_bits(p)·2^i`` good bits.  This helper picks the pair per call:
+
+    * fp32/fp64 targets (≥ 24 bits): the paper's point — ``(DEFAULT_P,
+      iters_needed(DEFAULT_P, target))`` = (7, 2) for fp32 — so defaults
+      stay bit-identical to the fixed datapath.
+    * lower-precision targets: the smallest table in ``[DEFAULT_P,
+      max_seed_p]`` whose seed alone covers the target → **0 iterations**
+      (bf16 reaches seed-only at p ≥ 8); if no table qualifies, the
+      default table with the measured iteration count (fp16 → (7, 1)).
+    * a pinned ``p`` derives the matching predetermined counter.
+
+    Backed by the measured :func:`repro.core.lut.seed_bits` (i.e.
+    ``seed_rel_error_bound``), not the analytic p+1, so a policy can never
+    promise bits the burned ROM does not deliver.
+    """
+    if target_bits is None:
+        target_bits = target_bits_for(dtype) if dtype is not None else 24
+    if p is not None:
+        return p, iters_needed(p, target_bits)
+    if target_bits < 24:
+        for cand in range(DEFAULT_P, max_seed_p + 1):
+            if lut.seed_bits(cand) >= target_bits:
+                return cand, 0
+    return DEFAULT_P, iters_needed(DEFAULT_P, target_bits)
+
+
+def resolve_precision(
+    dtype, p: int | None, iters: int | None, target_bits: int | None = None
+) -> Tuple[int, int]:
+    """Concretize one call's ``(p, iters)`` from possibly-None knobs.
+
+    Both None → the :func:`precision_policy` pair for the dtype/target;
+    a pinned ``p`` derives its counter; a pinned ``iters`` keeps the
+    paper's default table (pinning the pass count says nothing about
+    wanting a wider ROM).
+    """
+    if p is not None and iters is not None:
+        return p, iters
+    if target_bits is None:
+        target_bits = target_bits_for(dtype)
+    if p is None and iters is None:
+        return precision_policy(target_bits=target_bits)
+    if p is None:
+        return DEFAULT_P, iters
+    return p, iters_needed(p, target_bits)
+
+
+# ---------------------------------------------------------------------------
+# Fast normalize / renormalize: branch-free integer bit-peel.
+#
+# ``frexp``/``ldexp`` lower to multi-op decompositions with value-dependent
+# select chains; on the hot path the same fields fall out of three integer
+# VPU ops (bitcast, shift/mask, or-reassemble) — the software twin of the
+# kernels' :mod:`repro.kernels.common` peel, kept full-range here (subnormal
+# inputs pre-scaled by 2^24, renormalize split into two exact pow2 factors
+# so gradual underflow / overflow round once, exactly like ``ldexp``).
+# ---------------------------------------------------------------------------
+
+# Single home for the IEEE-754 f32 field constants; the Pallas kernels'
+# in-tile peel (repro.kernels.common) imports these rather than re-burning
+# its own masks.
+F32_EXP_MASK = np.int32(0xFF)
+F32_MANT_MASK = np.int32(0x007FFFFF)
+F32_ONE_BITS = np.int32(0x3F800000)
+F32_SIGN_BIT = np.int32(np.uint32(0x80000000).view(np.int32))
+_SUBNORM_SCALE = np.float32(2.0**24)
+_F32_TINY = np.float32(2.0**-126)
+
+
+def _pow2(e: jnp.ndarray) -> jnp.ndarray:
+    """2^e as f32 for int32 e ∈ [-126, 127] (normal range only)."""
+    return jax.lax.bitcast_convert_type(
+        jax.lax.shift_left(e + 127, 23), jnp.float32
+    )
+
+
 def _normalize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x = m · 2^e with m ∈ [1, 2). Works on |x|; caller handles sign/specials."""
-    m, e = jnp.frexp(x)  # m ∈ [0.5, 1)
-    return m * 2.0, e - 1
+    """x = m · 2^e with m ∈ [1, 2), via integer field peel.
+
+    Works on positive finite f32 magnitudes; subnormals are pre-scaled into
+    the normal range (exact) so the peel sees a true mantissa.  Zeros /
+    infs / nans produce in-range garbage the callers overwrite in their
+    specials pass — identical contract to the frexp path it replaces, and
+    bit-identical to it on every finite input.
+    """
+    sub = x < _F32_TINY
+    scaled = jnp.where(sub, x * _SUBNORM_SCALE, x)
+    bits = jax.lax.bitcast_convert_type(scaled, jnp.int32)
+    e = (jax.lax.shift_right_logical(bits, 23) & F32_EXP_MASK) - 127
+    m = jax.lax.bitcast_convert_type(
+        (bits & F32_MANT_MASK) | F32_ONE_BITS, jnp.float32
+    )
+    return m, jnp.where(sub, e - 24, e)
+
+
+def _scale_pow2(q: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """q · 2^e for q ∈ [0.25, 2) and any int32 e — the renormalize step.
+
+    Two pow2 factors: the first is clipped so ``q * 2^e1`` stays normal
+    (exact multiply), the second rounds once into subnormal/overflow —
+    the same single rounding ``ldexp`` performs.  |e| beyond ±152/130
+    saturates to 0/inf either way, so clipping first is value-preserving.
+    """
+    e = jnp.clip(e, -152, 130)
+    e1 = jnp.clip(e, -124, 125)
+    return (q * _pow2(e1)) * _pow2(e - e1)
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +345,7 @@ def _reciprocal_impl(
     mag = jnp.abs(d32)
     m, e = _normalize(mag)
     q = gs_reciprocal_normalized(m, p=p, iters=iters, variant=variant)
-    out = sign * jnp.ldexp(q, -e)
+    out = sign * _scale_pow2(q, -e)
     # Specials: 1/0 = ±inf, 1/±inf = ±0, nan propagates via sign/mag math.
     out = jnp.where(mag == 0.0, sign * jnp.inf, out)
     out = jnp.where(jnp.isinf(mag), sign * 0.0, out)
@@ -231,21 +371,25 @@ def _reciprocal_bwd(p, iters, variant, q, g):
 _reciprocal.defvjp(_reciprocal_fwd, _reciprocal_bwd)
 
 
-@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+@partial(jax.jit, static_argnames=("p", "iters", "variant", "target_bits"))
 def gs_reciprocal(
     d: jnp.ndarray,
     *,
-    p: int = DEFAULT_P,
+    p: int | None = None,
     iters: int | None = None,
     variant: str = "feedback",
+    target_bits: int | None = None,
 ) -> jnp.ndarray:
     """Goldschmidt reciprocal 1/d, any sign/scale; matches d's dtype.
+
+    ``p``/``iters`` default to the :func:`precision_policy` pair for the
+    operand dtype (or an explicit ``target_bits``): (7, 2) for fp32 —
+    bit-identical to the fixed datapath — and seed-only (8, 0) for bf16.
 
     Differentiable: VJP is ``-q²·ḡ`` on the saved quotient (module
     docstring), not autodiff through the bit peel.
     """
-    if iters is None:
-        iters = iters_for(p, _target_bits(d.dtype))
+    p, iters = resolve_precision(d.dtype, p, iters, target_bits)
     return _reciprocal(d, p, iters, variant)
 
 
@@ -265,7 +409,7 @@ def _divide_impl(n: jnp.ndarray, d: jnp.ndarray, p: int, iters: int,
     nmag, dmag = jnp.abs(n32), jnp.abs(d32)
     mn, en = _normalize(nmag)
     md, ed = _normalize(dmag)
-    k1 = lut.lookup_reciprocal(md, DEFAULT_P if p is None else p)
+    k1 = lut.lookup_reciprocal(md, p)
     q = mn * k1  # MULT 1
     r = md * k1  # MULT 2
     if variant == "pipelined":
@@ -273,7 +417,7 @@ def _divide_impl(n: jnp.ndarray, d: jnp.ndarray, p: int, iters: int,
             q, r = _step2(q, r)
     else:
         q, _ = jax.lax.fori_loop(0, iters, lambda _, qr: _step2(*qr), (q, r))
-    out = sign * jnp.ldexp(q, en - ed)
+    out = sign * _scale_pow2(q, en - ed)
     out = jnp.where(dmag == 0.0, sign * jnp.inf, out)
     out = jnp.where(jnp.isinf(dmag), sign * 0.0, out)
     out = jnp.where((nmag == 0.0) & (dmag != 0.0), sign * 0.0, out)
@@ -313,18 +457,18 @@ def _divide_bwd(p, iters, variant, res, g):
 _divide.defvjp(_divide_fwd, _divide_bwd)
 
 
-@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+@partial(jax.jit, static_argnames=("p", "iters", "variant", "target_bits"))
 def gs_divide(
     n: jnp.ndarray,
     d: jnp.ndarray,
     *,
-    p: int = DEFAULT_P,
+    p: int | None = None,
     iters: int | None = None,
     variant: str = "feedback",
+    target_bits: int | None = None,
 ) -> jnp.ndarray:
     """Goldschmidt division n/d (differentiable; see module docstring)."""
-    if iters is None:
-        iters = iters_for(p, _target_bits(jnp.result_type(n, d)))
+    p, iters = resolve_precision(jnp.result_type(n, d), p, iters, target_bits)
     return _divide(n, d, p, iters, variant)
 
 
@@ -339,7 +483,7 @@ def _rsqrt_impl(x: jnp.ndarray, p: int, iters: int, variant: str
     m = jnp.where(odd, m * 2.0, m)
     e = jnp.where(odd, e - 1, e)
     k = gs_rsqrt_normalized(m, p=p, iters=iters, variant=variant)
-    out = jnp.ldexp(k, -(e // 2))
+    out = _scale_pow2(k, -(e // 2))
     out = jnp.where(x32 == 0.0, jnp.inf, out)
     out = jnp.where(jnp.isinf(x32), 0.0, out)
     out = jnp.where((x32 < 0.0) | jnp.isnan(x32), jnp.nan, out)
@@ -364,17 +508,17 @@ def _rsqrt_bwd(p, iters, variant, q, g):
 _rsqrt.defvjp(_rsqrt_fwd, _rsqrt_bwd)
 
 
-@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+@partial(jax.jit, static_argnames=("p", "iters", "variant", "target_bits"))
 def gs_rsqrt(
     x: jnp.ndarray,
     *,
-    p: int = DEFAULT_P,
+    p: int | None = None,
     iters: int | None = None,
     variant: str = "feedback",
+    target_bits: int | None = None,
 ) -> jnp.ndarray:
     """Goldschmidt 1/sqrt(x) (differentiable: VJP = -q³/2 on the output)."""
-    if iters is None:
-        iters = iters_for(p, _target_bits(x.dtype))
+    p, iters = resolve_precision(x.dtype, p, iters, target_bits)
     return _rsqrt(x, p, iters, variant)
 
 
@@ -400,7 +544,7 @@ def _sqrt_impl(x: jnp.ndarray, p: int, iters: int, variant: str
             g, h = body(g, h)
     else:
         g, h = jax.lax.fori_loop(0, iters, lambda _, gh: body(*gh), (g, h))
-    out = jnp.ldexp(g, e // 2)
+    out = _scale_pow2(g, e // 2)
     out = jnp.where(x32 == 0.0, 0.0, out)
     out = jnp.where(jnp.isinf(x32), jnp.inf, out)
     out = jnp.where((x32 < 0.0) | jnp.isnan(x32), jnp.nan, out)
@@ -427,15 +571,15 @@ def _sqrt_bwd(p, iters, variant, q, g):
 _sqrt.defvjp(_sqrt_fwd, _sqrt_bwd)
 
 
-@partial(jax.jit, static_argnames=("p", "iters", "variant"))
+@partial(jax.jit, static_argnames=("p", "iters", "variant", "target_bits"))
 def gs_sqrt(
     x: jnp.ndarray,
     *,
-    p: int = DEFAULT_P,
+    p: int | None = None,
     iters: int | None = None,
     variant: str = "feedback",
+    target_bits: int | None = None,
 ) -> jnp.ndarray:
     """Goldschmidt sqrt(x) (differentiable; see module docstring)."""
-    if iters is None:
-        iters = iters_for(p, _target_bits(x.dtype))
+    p, iters = resolve_precision(x.dtype, p, iters, target_bits)
     return _sqrt(x, p, iters, variant)

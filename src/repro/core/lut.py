@@ -38,6 +38,8 @@ __all__ = [
     "lookup_reciprocal",
     "lookup_rsqrt",
     "seed_rel_error_bound",
+    "seed_rel_error_bound_rsqrt",
+    "seed_bits",
 ]
 
 
@@ -95,8 +97,20 @@ def rsqrt_table_f32(p: int) -> np.ndarray:
     return (rsqrt_table_int(p).astype(np.float64) * 2.0 ** -(p + 2)).astype(np.float32)
 
 
+@functools.lru_cache(maxsize=None)
 def seed_rel_error_bound(p: int) -> float:
-    """Measured max relative error of the reciprocal ROM (≈ 2^-(p+1))."""
+    """Measured max relative error of the reciprocal ROM.
+
+    The unquantized midpoint constant 2/(D_lo+D_hi) satisfies the textbook
+    2^-(p+1) bound exactly; rounding it to the (p+2)-bit ROM word perturbs
+    K by up to half an output ulp (2^-(p+3)), which costs up to
+    2^-(p+3)·D ≤ 2^-(p+2) of *relative* error, so the realizable optimum
+    (Sarma–Matula) lands at 2^-(p+1) + 2^-(p+2) in the worst case —
+    the bound test_lut asserts.  Measured: ≈ 1.17 · 2^-(p+1),
+    i.e. strictly fewer than p+1 but at least p good bits for every p —
+    which is what :func:`seed_bits` (and the precision policy on top of it)
+    relies on.
+    """
     tab = reciprocal_table_int(p).astype(np.float64) * 2.0 ** -(p + 2)
     # worst case is at bucket endpoints
     i = np.arange(2**p, dtype=np.float64)
@@ -104,6 +118,37 @@ def seed_rel_error_bound(p: int) -> float:
     for d in (1.0 + i * 2.0**-p, 1.0 + (i + 1) * 2.0**-p - 2.0**-53):
         errs.append(np.max(np.abs(tab * d - 1.0)))
     return float(max(errs))
+
+
+@functools.lru_cache(maxsize=None)
+def seed_rel_error_bound_rsqrt(p: int) -> float:
+    """Measured max relative error of the rsqrt seed ROM over M ∈ [1, 4).
+
+    |K·sqrt(M) - 1| is monotone in M within a bucket for fixed K, so the
+    bucket endpoints bound the error exactly (same construction as the
+    reciprocal bound).
+    """
+    tab = rsqrt_table_int(p).astype(np.float64) * 2.0 ** -(p + 2)
+    i = np.arange(2**p, dtype=np.float64)
+    width = 3.0 * 2.0**-p
+    errs = []
+    for m in (1.0 + i * width, 1.0 + (i + 1) * width - 2.0**-50):
+        errs.append(np.max(np.abs(tab * np.sqrt(m) - 1.0)))
+    return float(max(errs))
+
+
+@functools.lru_cache(maxsize=None)
+def seed_bits(p: int) -> int:
+    """Guaranteed good bits of the p-bit seed, across BOTH ROMs.
+
+    ``floor(-log2(max measured seed error))`` — the number the paper's
+    predetermined iteration counter doubles.  Both tables measure to
+    exactly ``p`` bits for p ∈ [2, 16] (the (p+2)-bit output quantization
+    costs the theoretical (p+1)-th bit); keeping this measured rather than
+    assuming ``p`` makes wider-table policies self-validating.
+    """
+    err = max(seed_rel_error_bound(p), seed_rel_error_bound_rsqrt(p))
+    return int(np.floor(-np.log2(err)))
 
 
 def lookup_reciprocal(m: jnp.ndarray, p: int) -> jnp.ndarray:

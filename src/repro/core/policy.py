@@ -13,9 +13,13 @@ micro-benchmark:
                         (``fori_loop`` + logic-block seeding).
 
 ``p_bits`` and ``iters`` correspond to the ROM index width and the logic
-block's predetermined counter value.  ``iters=None`` derives the count from
-the output dtype exactly as §III describes ("predetermined if we are sure
-of how many bits accuracy we need").
+block's predetermined counter value.  Left ``None`` (the default) the pair
+is derived per call by :func:`repro.core.goldschmidt.precision_policy` —
+§III's "predetermined if we are sure of how many bits accuracy we need",
+with the bit budget taken from ``target_bits`` when set (configs pin it to
+their compute dtype) and from the operand dtype otherwise.  fp32 budgets
+resolve to the paper's (7, 2) point; bf16 budgets run seed-only from a
+p ≥ 8 table, fp16 a single pass.
 """
 
 from __future__ import annotations
@@ -36,8 +40,9 @@ _MODES = ("exact", "gs_pipelined", "gs_feedback")
 @dataclasses.dataclass(frozen=True)
 class NumericsPolicy:
     mode: str = "gs_feedback"
-    p_bits: int = gs.DEFAULT_P
-    iters: Optional[int] = None  # None → derived from dtype (accuracy counter)
+    p_bits: Optional[int] = None  # None → precision_policy-derived width
+    iters: Optional[int] = None  # None → derived (accuracy counter)
+    target_bits: Optional[int] = None  # None → from each operand's dtype
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -53,25 +58,46 @@ class NumericsPolicy:
         if self.mode == "exact":
             return 1.0 / x
         return gs.gs_reciprocal(x, p=self.p_bits, iters=self.iters,
-                                variant=self.variant)
+                                variant=self.variant,
+                                target_bits=self.target_bits)
 
     def divide(self, n: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
         if self.mode == "exact":
             return n / d
         return gs.gs_divide(n, d, p=self.p_bits, iters=self.iters,
-                            variant=self.variant)
+                            variant=self.variant,
+                            target_bits=self.target_bits)
 
     def rsqrt(self, x: jnp.ndarray) -> jnp.ndarray:
         if self.mode == "exact":
             return jax.lax.rsqrt(x)
         return gs.gs_rsqrt(x, p=self.p_bits, iters=self.iters,
-                           variant=self.variant)
+                           variant=self.variant,
+                           target_bits=self.target_bits)
 
     def sqrt(self, x: jnp.ndarray) -> jnp.ndarray:
         if self.mode == "exact":
             return jnp.sqrt(x)
         return gs.gs_sqrt(x, p=self.p_bits, iters=self.iters,
-                          variant=self.variant)
+                          variant=self.variant,
+                          target_bits=self.target_bits)
+
+    def kernel_precision(self, dtype) -> dict:
+        """``p``/``iters`` kwargs for a fused Pallas kernel call site.
+
+        The kernel dispatch derives unpinned knobs from the *operand*
+        dtype; when this policy carries a different ``target_bits``
+        budget, that derivation would silently diverge from the jnp
+        path, so the pair is resolved here and pinned.  When the budget
+        matches the operand dtype (the config default) the knobs stay
+        unpinned and the autotune cache remains authoritative.
+        """
+        if (self.target_bits is not None
+                and self.target_bits != gs.target_bits_for(dtype)):
+            p, iters = gs.resolve_precision(
+                dtype, self.p_bits, self.iters, self.target_bits)
+            return {"p": p, "iters": iters}
+        return {"p": self.p_bits, "iters": self.iters}
 
     # -- composite ops used across the stack ----------------------------------
 

@@ -35,13 +35,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lut
+from repro.core.goldschmidt import (F32_EXP_MASK, F32_MANT_MASK,
+                                    F32_ONE_BITS, F32_SIGN_BIT)
+# one authoritative default table width: the policy's (7, 2) fp32 pair and
+# the kernel sweep's defaults must agree for bit-identical cold starts
+from repro.core.goldschmidt import DEFAULT_P  # noqa: F401  (2^7 = lane row)
 
-DEFAULT_P = 7  # 2^7 = 128 table entries = one TPU lane row
-
-_F32_SIGN = np.int32(np.uint32(0x80000000).view(np.int32))
-_F32_EXP_MASK = np.int32(0xFF)
-_F32_MANT_MASK = np.int32(0x007FFFFF)
-_F32_ONE_BITS = np.int32(0x3F800000)
+# field constants live in core.goldschmidt (one home for both peels)
+_F32_SIGN = F32_SIGN_BIT
+_F32_EXP_MASK = F32_EXP_MASK
+_F32_MANT_MASK = F32_MANT_MASK
+_F32_ONE_BITS = F32_ONE_BITS
 
 
 def fit_block(s: int, target: int) -> int:

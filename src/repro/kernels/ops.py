@@ -3,12 +3,16 @@
 Shape-polymorphic: callers hand any-shaped arrays; wrappers pad / reshape
 to kernel tiling (done inside each kernel module) and restore.
 
-Every op resolves its launch config (``variant``, block shape, ``iters``,
-interpret-vs-compiled) through :mod:`repro.kernels.tuning` at trace time:
-explicit kwargs win, then — when tuning is enabled via ``REPRO_AUTOTUNE=1``
-or ``tuning.enable_tuning()`` — the persisted autotune cache for this
-``(kernel, shape-bucket, dtype, backend)``, then the registry defaults
-(the seed's hard-coded literals, so cold-start behavior is unchanged).
+Every op resolves its launch config (``variant``, block shape, the ROM
+width ``p``, ``iters``, interpret-vs-compiled) through
+:mod:`repro.kernels.tuning` at trace time: explicit kwargs win, then —
+when tuning is enabled via ``REPRO_AUTOTUNE=1`` or
+``tuning.enable_tuning()`` — the persisted autotune cache for this
+``(kernel, shape-bucket, dtype, backend)``, then the registry defaults.
+Defaults leave ``(p, iters)`` to the operand dtype's
+:func:`repro.core.goldschmidt.precision_policy` pair: fp32 resolves to
+the seed literals (7, 2) — cold-start fp32 behavior is bit-identical —
+while bf16 runs seed-only (8, 0) and fp16 single-pass (7, 1).
 
 ``interpret`` defaults to True because this container is CPU-only; on a
 real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
@@ -49,46 +53,48 @@ __all__ = [
 ]
 
 
-def gs_recip(x, *, p: int = common.DEFAULT_P, **config):
-    cfg = dispatch.resolve("gs_recip", x.shape, x.dtype, config)
-    return _gs_recip(x, p=p, **cfg)
+def gs_recip(x, *, p: int | None = None, **config):
+    cfg = dispatch.resolve("gs_recip", x.shape, x.dtype, {"p": p, **config})
+    return _gs_recip(x, **cfg)
 
 
-def gs_rsqrt(x, *, p: int = common.DEFAULT_P, **config):
-    cfg = dispatch.resolve("gs_rsqrt", x.shape, x.dtype, config)
-    return _gs_rsqrt(x, p=p, **cfg)
+def gs_rsqrt(x, *, p: int | None = None, **config):
+    cfg = dispatch.resolve("gs_rsqrt", x.shape, x.dtype, {"p": p, **config})
+    return _gs_rsqrt(x, **cfg)
 
 
-def gs_sqrt(x, *, p: int = common.DEFAULT_P, **config):
+def gs_sqrt(x, *, p: int | None = None, **config):
     # Same datapath, ROM, and tiling as rsqrt — shares its tuning entry.
-    cfg = dispatch.resolve("gs_rsqrt", x.shape, x.dtype, config)
-    return _gs_sqrt(x, p=p, **cfg)
+    cfg = dispatch.resolve("gs_rsqrt", x.shape, x.dtype, {"p": p, **config})
+    return _gs_sqrt(x, **cfg)
 
 
-def gs_softmax(x, *, p: int = common.DEFAULT_P, **config):
-    cfg = dispatch.resolve("gs_softmax", x.shape, x.dtype, config)
-    return _gs_softmax(x, p=p, **cfg)
+def gs_softmax(x, *, p: int | None = None, **config):
+    cfg = dispatch.resolve("gs_softmax", x.shape, x.dtype, {"p": p, **config})
+    return _gs_softmax(x, **cfg)
 
 
-def gs_rmsnorm(x, gain, *, eps: float = 1e-6, p: int = common.DEFAULT_P,
+def gs_rmsnorm(x, gain, *, eps: float = 1e-6, p: int | None = None,
                **config):
-    cfg = dispatch.resolve("gs_rmsnorm", x.shape, x.dtype, config)
-    return _gs_rmsnorm(x, gain, eps=eps, p=p, **cfg)
+    cfg = dispatch.resolve("gs_rmsnorm", x.shape, x.dtype, {"p": p, **config})
+    return _gs_rmsnorm(x, gain, eps=eps, **cfg)
 
 
 def gs_adam_update(param, grad, m, v, step, *, lr, beta1: float = 0.9,
                    beta2: float = 0.999, eps: float = 1e-8,
-                   weight_decay: float = 0.0, p: int = common.DEFAULT_P,
+                   weight_decay: float = 0.0, p: int | None = None,
                    **config):
-    cfg = dispatch.resolve("gs_adam", param.shape, param.dtype, config)
+    cfg = dispatch.resolve("gs_adam", param.shape, param.dtype,
+                           {"p": p, **config})
     return _gs_adam_update(param, grad, m, v, step, lr=lr, beta1=beta1,
                            beta2=beta2, eps=eps, weight_decay=weight_decay,
-                           p=p, **cfg)
+                           **cfg)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
-                    p: int = common.DEFAULT_P, **config):
-    cfg = dispatch.resolve("flash_attention", q.shape, q.dtype, config)
+                    p: int | None = None, **config):
+    cfg = dispatch.resolve("flash_attention", q.shape, q.dtype,
+                           {"p": p, **config})
     # Tuned/default blocks come from a pow2 shape bucket, so clamp them to
     # tile the actual sequence length — but never rewrite a block size the
     # caller passed explicitly (the kernel's divisibility assert applies).
@@ -96,5 +102,4 @@ def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
     for key in ("block_q", "block_kv"):
         if config.get(key) is None:
             cfg[key] = common.fit_block(s, cfg[key])
-    return _flash_attention(q, k, v, causal=causal, sm_scale=sm_scale, p=p,
-                            **cfg)
+    return _flash_attention(q, k, v, causal=causal, sm_scale=sm_scale, **cfg)

@@ -112,7 +112,7 @@ def autotune(
     for config in candidates if candidates is not None else spec.candidates(
         shape, dtype, backend
     ):
-        cfg = dispatch.finalize(config)
+        cfg = dispatch.finalize(config, dtype)
         us = time_call(
             lambda cfg=cfg: spec.fn(*args, **kwargs, **cfg),
             warmup=warmup,
@@ -120,7 +120,7 @@ def autotune(
         )
         trials.append(Trial(config=cfg, us_per_call=us))
     best = min(trials, key=lambda t: t.us_per_call)
-    default_cfg = dispatch.finalize(spec.defaults)
+    default_cfg = dispatch.finalize(spec.defaults, dtype)
     default_trial = next(
         (t for t in trials
          if all(t.config.get(k) == v for k, v in default_cfg.items())),

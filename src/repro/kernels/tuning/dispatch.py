@@ -49,11 +49,26 @@ def enable_tuning(on: Optional[bool] = True) -> None:
     _enabled_override = on
 
 
-def finalize(config: Mapping[str, Any]) -> Dict[str, Any]:
-    """Concretize deferred values (interpret=None -> env default)."""
+def finalize(config: Mapping[str, Any], dtype=None) -> Dict[str, Any]:
+    """Concretize deferred values.
+
+    ``interpret=None`` → env default; ``p``/``iters`` = None → the
+    :func:`repro.core.goldschmidt.precision_policy` pair for ``dtype``
+    ((7, 2) for fp32 — the seed literals — seed-only for bf16 with p ≥ 8).
+    A pinned ``p`` derives its matching pass count; a pinned ``iters``
+    keeps the default table (see ``resolve_precision``).
+    """
     cfg = dict(config)
     if cfg.get("interpret") is None:
         cfg["interpret"] = interpret_default()
+    if "p" in cfg or "iters" in cfg:
+        if cfg.get("p") is None or cfg.get("iters") is None:
+            from repro.core.goldschmidt import resolve_precision
+
+            cfg["p"], cfg["iters"] = resolve_precision(
+                dtype if dtype is not None else jax.numpy.float32,
+                cfg.get("p"), cfg.get("iters"),
+            )
     return cfg
 
 
@@ -78,5 +93,12 @@ def resolve(
             # the kernel signature.
             cfg.update({k: v for k, v in tuned.items() if k in cfg})
     if overrides:
-        cfg.update({k: v for k, v in overrides.items() if v is not None})
-    return finalize(cfg)
+        ov = {k: v for k, v in overrides.items() if v is not None}
+        # (p, iters) is a joint accuracy budget: pinning one half must not
+        # inherit a tuned value of the other half (tuned for a DIFFERENT
+        # pair), or the result can undershoot the dtype's target bits.
+        # Reset the unpinned partner so finalize re-derives it.
+        if ("p" in cfg or "iters" in cfg) and (("p" in ov) != ("iters" in ov)):
+            cfg["iters" if "p" in ov else "p"] = None
+        cfg.update(ov)
+    return finalize(cfg, dtype)

@@ -8,8 +8,12 @@ into a runtime policy:
 * ``variant``     — ``feedback`` (one multiplier pair + feedback mux) vs
                     ``pipelined`` (unrolled replicated pairs),
 * ``block_rows`` / ``block_q`` / ``block_kv`` — VMEM tile shape,
+* ``p``           — ROM index width: the seed-vs-iteration trade the paper
+                    spends its §II on, swept jointly with
 * ``iters``       — §III's accuracy counter, derived from the output dtype
-                    via :func:`repro.core.goldschmidt.iters_for`,
+                    via :func:`repro.core.goldschmidt.precision_policy`;
+                    the (p, iters) product is pruned to pairs that reach
+                    the dtype's target bits with no wasted pass,
 * ``interpret``   — interpret-mode vs Mosaic-compiled pallas_call
                     (candidate set depends on the backend).
 
@@ -28,7 +32,7 @@ from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.goldschmidt import iters_for
+from repro.core.goldschmidt import iters_needed, target_bits_for
 from repro.kernels import common
 from repro.kernels.flash_attention import (flash_attention,
                                            flash_attention_bwd_bench)
@@ -43,16 +47,39 @@ AxisValues = Sequence[Any]
 AxisFn = Callable[[Shape, Any, str], AxisValues]
 
 
-def _target_bits(dtype) -> int:
-    name = np.dtype(dtype).name
-    return {"float32": 24, "bfloat16": 8, "float16": 11}.get(name, 24)
+def _p_axis(shape: Shape, dtype, backend: str) -> AxisValues:
+    """ROM index widths on the seed-vs-iteration frontier for this dtype.
+
+    fp32-grade targets trade the paper's (7, 2) point against a 4096-entry
+    table that needs a single pass (p=12 → 1 iteration); low-precision
+    targets sweep the seed-only widths up to 2^9 entries (the in-kernel
+    one-hot ROM read grows with 2^p, so wider candidates never win and
+    only stretch the sweep).
+    """
+    if target_bits_for(dtype) >= 24:
+        return (common.DEFAULT_P, 12)
+    return (common.DEFAULT_P, 8, 9)
 
 
 def _iters_axis(shape: Shape, dtype, backend: str) -> AxisValues:
-    """Accuracy-predetermined counter: never fewer bits than the output
-    dtype needs, never more than the fp32 default (2 passes from p=7)."""
-    derived = iters_for(common.DEFAULT_P, _target_bits(dtype))
-    return tuple(sorted({min(derived, 2), 2}))
+    """Accuracy-predetermined counters matching the ``p`` axis: for each
+    candidate table width, the measured pass count that reaches the output
+    dtype's bits.  The (p, iters) product is pruned to exactly these pairs
+    by :func:`_precision_ok`."""
+    tb = target_bits_for(dtype)
+    return tuple(sorted({
+        iters_needed(p, tb) for p in _p_axis(shape, dtype, backend)
+    }))
+
+
+def _precision_ok(config: Mapping[str, Any], dtype) -> bool:
+    """Keep only frontier (p, iters) pairs: enough bits for the dtype
+    (never an accuracy regression past the target), no wasted passes
+    (a pair with more passes than its seed needs is dominated)."""
+    p, iters = config.get("p"), config.get("iters")
+    if p is None or iters is None:
+        return True
+    return iters == iters_needed(p, target_bits_for(dtype))
 
 
 def _interpret_axis(shape: Shape, dtype, backend: str) -> AxisValues:
@@ -126,19 +153,30 @@ class KernelSpec:
         self, shape: Shape, dtype, backend: str
     ) -> Sequence[Dict[str, Any]]:
         """Cartesian product of the axes, concretized for shape/dtype/
-        backend.  The seed defaults are axis members by construction, so
-        the autotuned winner can never lose to them."""
+        backend, pruned to the (p, iters) accuracy frontier.  The
+        dtype-derived defaults are axis members by construction, so the
+        autotuned winner can never lose to them — nor undershoot the
+        output dtype's accuracy target."""
         names = list(self.axes)
         values = [
             v(shape, dtype, backend) if callable(v) else v
             for v in (self.axes[n] for n in names)
         ]
-        return [dict(zip(names, combo)) for combo in itertools.product(*values)]
+        return [
+            cfg
+            for combo in itertools.product(*values)
+            if _precision_ok(cfg := dict(zip(names, combo)), dtype)
+        ]
 
 
+# ``p``/``iters`` defaults are ``None`` = derived from the operand dtype by
+# :func:`repro.core.goldschmidt.precision_policy` at dispatch-finalize time:
+# (7, 2) for fp32 — exactly the seed literals, so cold-start fp32 behavior
+# is bit-identical — and seed-only / single-pass pairs for bf16 / fp16.
 _ELEMENTWISE_AXES = {
     "variant": ("feedback", "pipelined"),
     "block_rows": (32, 64, 128),
+    "p": _p_axis,
     "iters": _iters_axis,
     "interpret": _interpret_axis,
 }
@@ -146,6 +184,7 @@ _ELEMENTWISE_AXES = {
 _ROWWISE_AXES = {
     "variant": ("feedback", "pipelined"),
     "block_rows": (8, 16, 32),
+    "p": _p_axis,
     "iters": _iters_axis,
     "interpret": _interpret_axis,
 }
@@ -156,24 +195,24 @@ REGISTRY: Dict[str, KernelSpec] = {
         KernelSpec(
             name="gs_recip",
             fn=gs_recip,
-            defaults={"variant": "feedback", "block_rows": 64, "iters": 2,
-                      "interpret": None},
+            defaults={"variant": "feedback", "block_rows": 64, "p": None,
+                      "iters": None, "interpret": None},
             axes=_ELEMENTWISE_AXES,
             make_args=_args_elementwise,
         ),
         KernelSpec(
             name="gs_rsqrt",
             fn=gs_rsqrt,
-            defaults={"variant": "feedback", "block_rows": 64, "iters": 2,
-                      "interpret": None},
+            defaults={"variant": "feedback", "block_rows": 64, "p": None,
+                      "iters": None, "interpret": None},
             axes=_ELEMENTWISE_AXES,
             make_args=_args_elementwise,
         ),
         KernelSpec(
             name="gs_rmsnorm",
             fn=gs_rmsnorm,
-            defaults={"variant": "feedback", "block_rows": 8, "iters": 2,
-                      "interpret": None},
+            defaults={"variant": "feedback", "block_rows": 8, "p": None,
+                      "iters": None, "interpret": None},
             axes=_ROWWISE_AXES,
             make_args=_args_rmsnorm,
             supports=lambda shape: len(shape) >= 2,
@@ -181,8 +220,8 @@ REGISTRY: Dict[str, KernelSpec] = {
         KernelSpec(
             name="gs_softmax",
             fn=gs_softmax,
-            defaults={"variant": "feedback", "block_rows": 8, "iters": 2,
-                      "interpret": None},
+            defaults={"variant": "feedback", "block_rows": 8, "p": None,
+                      "iters": None, "interpret": None},
             axes=_ROWWISE_AXES,
             make_args=_args_rowwise,
             supports=lambda shape: len(shape) >= 2,
@@ -190,11 +229,12 @@ REGISTRY: Dict[str, KernelSpec] = {
         KernelSpec(
             name="gs_adam",
             fn=gs_adam_update,
-            defaults={"variant": "feedback", "block_rows": 32, "iters": 2,
-                      "interpret": None},
+            defaults={"variant": "feedback", "block_rows": 32, "p": None,
+                      "iters": None, "interpret": None},
             axes={
                 "variant": ("feedback", "pipelined"),
                 "block_rows": (16, 32, 64),
+                "p": _p_axis,
                 "iters": _iters_axis,
                 "interpret": _interpret_axis,
             },
@@ -204,11 +244,12 @@ REGISTRY: Dict[str, KernelSpec] = {
             name="flash_attention",
             fn=flash_attention,
             defaults={"variant": "feedback", "block_q": 128, "block_kv": 128,
-                      "iters": 2, "interpret": None},
+                      "p": None, "iters": None, "interpret": None},
             axes={
                 "variant": ("feedback", "pipelined"),
                 "block_q": _seq_block_axis,
                 "block_kv": _seq_block_axis,
+                "p": _p_axis,
                 "iters": _iters_axis,
                 "interpret": _interpret_axis,
             },

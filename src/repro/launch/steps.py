@@ -44,7 +44,10 @@ def make_train_step(cfg: ArchConfig, hp: Optional[TrainHParams] = None,
                     dp: Tuple[str, ...] = ()) -> Callable:
     hp = hp or TrainHParams(
         schedule="wsd" if cfg.name.startswith("minicpm") else "cosine")
-    policy = cfg.policy()
+    # The optimizer budgets its Goldschmidt accuracy for the param/state
+    # dtype (fp32 by default → the bit-identical (7, 2) datapath), not the
+    # activation dtype the model policy uses.
+    opt_policy = cfg.optimizer_policy()
 
     def train_step(params, opt_state, batch):
         with shr.activation_context(mesh, dp):
@@ -52,7 +55,7 @@ def make_train_step(cfg: ArchConfig, hp: Optional[TrainHParams] = None,
                 lambda p: api.loss_fn(cfg, p, batch))(params)
             lr = lr_at(hp, opt_state["step"])
             new_params, new_opt, metrics = adamw_update(
-                params, grads, opt_state, lr=lr, policy=policy,
+                params, grads, opt_state, lr=lr, policy=opt_policy,
                 beta1=hp.beta1, beta2=hp.beta2, weight_decay=hp.weight_decay,
                 clip_norm=hp.clip_norm, kernel_impl=cfg.kernel_impl,
             )

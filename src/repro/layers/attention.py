@@ -251,7 +251,7 @@ def flash(
         o = ops.flash_attention(
             q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
             v.transpose(0, 2, 1, 3), causal=causal, sm_scale=sm_scale,
-            variant=policy.variant, iters=policy.iters,
+            variant=policy.variant, **policy.kernel_precision(q.dtype),
         )
         return o.transpose(0, 2, 1, 3)
     return flash_chunked(

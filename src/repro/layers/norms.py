@@ -27,10 +27,13 @@ def rmsnorm(params, x, *, eps: float, policy: NumericsPolicy,
         from repro.kernels import ops
 
         # block_rows / interpret resolve through the tuning dispatch; the
-        # policy pins the datapath variant and (if set) the iteration count.
+        # policy pins the datapath variant and the (ROM width, iteration
+        # count) pair whenever its accuracy budget differs from x's dtype
+        # — otherwise they derive from the dtype (bf16 activations run
+        # the seed-only datapath) and stay autotunable.
         return ops.gs_rmsnorm(
             x, params["scale"], eps=eps, variant=policy.variant,
-            iters=policy.iters,
+            **policy.kernel_precision(x.dtype),
         )
     x32 = x.astype(jnp.float32)
     ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)

@@ -72,7 +72,7 @@ def adamw_update(
             return ops.gs_adam_update(
                 p, g, m, v, step, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
                 weight_decay=weight_decay, variant=policy.variant,
-                iters=policy.iters,
+                **policy.kernel_precision(p.dtype),
             )
     else:
         # The fused kernel recomputes these from its bc operand; only the

@@ -6,7 +6,7 @@ import pytest
 from repro.core import lut
 
 
-@pytest.mark.parametrize("p", [4, 6, 7, 8, 10])
+@pytest.mark.parametrize("p", list(range(5, 13)) + [4])
 class TestReciprocalTable:
     def test_shape_and_width(self, p):
         t = lut.reciprocal_table_int(p)
@@ -20,20 +20,38 @@ class TestReciprocalTable:
         assert np.all(np.diff(t.astype(np.int64)) <= 0)
 
     def test_seed_error_bound(self, p):
-        # optimal table: max relative error ~ 2^-(p+1) (with midpoint
-        # rounding it's slightly above; [4] budgets 2^-p safely)
+        # The unquantized midpoint constant meets the textbook 2^-(p+1);
+        # the (p+2)-bit ROM word adds up to half an output ulp, so the
+        # realizable (Sarma-Matula-optimal) bound is 2^-(p+1) + 2^-(p+2).
+        # Measured ≈ 1.17·2^-(p+1): always at least p good bits, the
+        # invariant seed_bits()/precision_policy() build on.
         err = lut.seed_rel_error_bound(p)
+        assert err <= 2.0 ** -(p + 1) + 2.0 ** -(p + 2)
         assert err < 2.0 ** -p
         assert err > 2.0 ** -(p + 3)  # sanity: not magically better
+        assert lut.seed_bits(p) == p
+
+    def test_unquantized_midpoint_meets_textbook_bound(self, p):
+        # the continuous optimum the ROM quantizes: max rel err <= 2^-(p+1)
+        i = np.arange(2 ** p, dtype=np.float64)
+        lo = 1.0 + i * 2.0 ** -p
+        hi = 1.0 + (i + 1.0) * 2.0 ** -p
+        k = 2.0 / (lo + hi)
+        err = max(np.abs(k * lo - 1.0).max(), np.abs(k * hi - 1.0).max())
+        assert err <= 2.0 ** -(p + 1)
 
 
-@pytest.mark.parametrize("p", [6, 7, 8])
+@pytest.mark.parametrize("p", list(range(5, 13)))
 class TestRsqrtTable:
     def test_range(self, p):
         t = lut.rsqrt_table_int(p)
         assert t.shape == (2 ** p,)
         assert t.min() >= 2 ** (p + 1)
         assert t.max() <= 2 ** (p + 2)
+
+    def test_monotone_nonincreasing(self, p):
+        t = lut.rsqrt_table_int(p)
+        assert np.all(np.diff(t.astype(np.int64)) <= 0)
 
     def test_seed_accuracy(self, p):
         m = np.linspace(1.0, 4.0, 8193)[:-1].astype(np.float32)
@@ -42,6 +60,25 @@ class TestRsqrtTable:
         y = np.asarray(lut.lookup_rsqrt(jnp.asarray(m), p))
         rel = np.abs(y * np.sqrt(m.astype(np.float64)) - 1.0)
         assert rel.max() < 2.0 ** -(p - 1)
+
+    def test_seed_error_bound_rsqrt(self, p):
+        err = lut.seed_rel_error_bound_rsqrt(p)
+        assert 2.0 ** -(p + 2) < err < 2.0 ** -p  # p good bits, measured
+
+
+class TestLazyWideTables:
+    def test_wide_tables_build_lazily_up_to_p12(self):
+        # a cold build per width; lru_cache makes repeats free
+        for p in (11, 12):
+            assert lut.reciprocal_table_f32(p).shape == (2 ** p,)
+            assert lut.rsqrt_table_f32(p).shape == (2 ** p,)
+        assert lut.reciprocal_table_f32(12) is lut.reciprocal_table_f32(12)
+
+    def test_out_of_range_p_raises(self):
+        with pytest.raises(ValueError):
+            lut.reciprocal_table_int(17)
+        with pytest.raises(ValueError):
+            lut.rsqrt_table_int(1)
 
 
 def test_lookup_reciprocal_indexing():

@@ -36,6 +36,19 @@ class TestPolicyPrimitives:
         with pytest.raises(ValueError):
             NumericsPolicy(mode="bogus")
 
+    def test_kernel_precision_pins_only_divergent_budgets(self):
+        # budget != operand dtype: the pair is resolved and pinned, so
+        # the pallas dispatch cannot re-derive a weaker one
+        pol = NumericsPolicy(target_bits=24)
+        assert pol.kernel_precision(jnp.bfloat16) == {"p": 7, "iters": 2}
+        # budget == operand dtype (the config default): stays unpinned,
+        # autotune cache remains authoritative
+        pol8 = NumericsPolicy(target_bits=8)
+        assert pol8.kernel_precision(jnp.bfloat16) == {
+            "p": None, "iters": None}
+        assert NumericsPolicy().kernel_precision(jnp.float32) == {
+            "p": None, "iters": None}
+
     def test_iter_override(self):
         """iters=1 from a p=7 seed: ~16 good bits, visibly worse than 2."""
         x = jnp.asarray(np.linspace(1.1, 1.9, 1000, dtype=np.float32))

@@ -84,7 +84,7 @@ class TestCache:
 
 
 class TestDispatch:
-    DEFAULTS = {"variant": "feedback", "block_rows": 64, "iters": 2}
+    DEFAULTS = {"variant": "feedback", "block_rows": 64, "p": 7, "iters": 2}
 
     def test_disabled_ignores_cache(self):
         tuning.get_cache().put(
@@ -141,9 +141,76 @@ class TestDispatch:
         assert not tuning.tuning_enabled()
 
 
+class TestPrecisionResolution:
+    """(p, iters) resolve through the registry for every kernel, derived
+    from the operand dtype when unpinned: fp32 keeps the paper's (7, 2),
+    bf16 runs seed-only with p >= 8, fp16 a single pass — strictly fewer
+    step-2 passes than fp32 on every low-precision path."""
+
+    SHAPE_FOR = {
+        "gs_recip": (64, 128), "gs_rsqrt": (64, 128),
+        "gs_softmax": (8, 128), "gs_rmsnorm": (8, 128),
+        "gs_adam": (64, 128), "flash_attention": (1, 2, 128, 64),
+    }
+
+    @pytest.mark.parametrize("kernel", sorted(SHAPE_FOR))
+    def test_all_kernels_resolve_dtype_pairs(self, kernel):
+        shape = self.SHAPE_FOR[kernel]
+        f32 = tuning.resolve(kernel, shape, F32)
+        bf16 = tuning.resolve(kernel, shape, jnp.bfloat16)
+        f16 = tuning.resolve(kernel, shape, jnp.float16)
+        assert (f32["p"], f32["iters"]) == (7, 2)
+        assert bf16["p"] >= 8 and bf16["iters"] == 0
+        assert f16["iters"] == 1
+        assert bf16["iters"] < f32["iters"] and f16["iters"] < f32["iters"]
+
+    def test_tuned_p_applies_and_explicit_p_wins(self):
+        key = tuning.cache_key("gs_recip", (64, 128), F32, _backend())
+        tuning.get_cache().put(key, _entry(p=12, iters=1))
+        tuning.enable_tuning(True)
+        cfg = tuning.resolve("gs_recip", (64, 128), F32)
+        assert (cfg["p"], cfg["iters"]) == (12, 1)
+        # pinning p must NOT inherit the tuned pair's iters (tuned for
+        # p=12; one pass from a p=9 seed undershoots fp32's 24 bits) —
+        # the partner re-derives: iters_needed(9, 24) == 2.
+        cfg = tuning.resolve("gs_recip", (64, 128), F32, {"p": 9})
+        assert (cfg["p"], cfg["iters"]) == (9, 2)
+        # and symmetrically: pinning iters drops the tuned table width
+        cfg = tuning.resolve("gs_recip", (64, 128), F32, {"iters": 2})
+        assert (cfg["p"], cfg["iters"]) == (7, 2)
+
+    def test_candidates_stay_on_accuracy_frontier(self):
+        from repro.core.goldschmidt import iters_needed, target_bits_for
+
+        for dtype in (F32, jnp.bfloat16, jnp.float16):
+            cands = tuning.get_spec("gs_recip").candidates(
+                (64, 128), dtype, _backend())
+            assert cands, dtype
+            for c in cands:
+                assert c["iters"] == iters_needed(
+                    c["p"], target_bits_for(dtype))
+
+    def test_frontier_pair_bit_identical_when_tuned(self):
+        """A tuned (12, 1) fp32 config changes speed, not validity: the
+        result still meets the fp32 accuracy target."""
+        x = jnp.asarray(np.exp(np.random.RandomState(2).uniform(
+            -3, 3, (64, 128))).astype(np.float32))
+        tuning.get_cache().put(
+            tuning.cache_key("gs_recip", x.shape, x.dtype, _backend()),
+            _entry(variant="feedback", block_rows=64, p=12, iters=1,
+                   interpret=True),
+        )
+        tuning.enable_tuning(True)
+        got = np.asarray(ops.gs_recip(x))
+        rel = np.abs(got * np.asarray(x) - 1.0)
+        assert rel.max() < 2.0 ** -21
+
+
 CANDS = [
-    {"variant": "feedback", "block_rows": 32, "iters": 2, "interpret": True},
-    {"variant": "feedback", "block_rows": 64, "iters": 2, "interpret": True},
+    {"variant": "feedback", "block_rows": 32, "p": 7, "iters": 2,
+     "interpret": True},
+    {"variant": "feedback", "block_rows": 64, "p": 7, "iters": 2,
+     "interpret": True},
 ]
 
 
