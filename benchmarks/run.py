@@ -10,6 +10,10 @@ fixed seed (7, 2) literals vs the dtype-derived precision policy — to
 ``BENCH_kernels.json`` (override with ``--json PATH``).  ``--check``
 exits non-zero if any kernel's max error exceeds its dtype bound (the
 CI bench-smoke gate).
+
+``--serve`` runs the continuous-vs-static serving benchmark instead and
+writes ``BENCH_serve.json``; with ``--check`` it exits non-zero on a
+parity or occupancy regression (the CI serve-smoke gate).
 """
 
 from __future__ import annotations
@@ -20,6 +24,7 @@ import sys
 
 SECTIONS = ("cycles", "accuracy", "divider", "kernels", "roofline")
 DEFAULT_JSON = "BENCH_kernels.json"
+DEFAULT_SERVE_JSON = "BENCH_serve.json"
 
 
 def _kernel_records(smoke: bool, json_path: str) -> list:
@@ -51,9 +56,39 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="exit 1 if any kernel max-err exceeds its dtype "
                          "bound")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the continuous-vs-static serving benchmark "
+                         f"only, write {DEFAULT_SERVE_JSON}; with --check, "
+                         "fail on parity/occupancy regressions")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    if args.serve:
+        from benchmarks import bench_serve
+
+        # always the smoke shapes: the full-config trace is a TPU job,
+        # not a CI/CPU one (run bench_serve.serve_records(smoke=False)
+        # directly for it)
+        rec = bench_serve.serve_records(
+            smoke=True, json_path=args.json or DEFAULT_SERVE_JSON)
+        m_c, m_s = rec["continuous"], rec["static"]
+        for sched, m in (("continuous", m_c), ("static", m_s)):
+            print(f"serve_{sched},{m['decode_time_s'] * 1e6 / max(m['decode_ticks'], 1):.1f},"
+                  f"\"{m['decode_tokens']} tok / {m['decode_ticks']} ticks, "
+                  f"{m['aggregate_tok_per_s']:.1f} tok/s aggregate, "
+                  f"occupancy {m['occupancy']:.2f}\"")
+        print(f"serve_speedup,0,\"ticks x{rec['tick_speedup']:.2f} "
+              f"tok/s x{rec['tok_s_speedup']:.2f} "
+              f"(normalized x{rec['tok_s_speedup_normalized']:.2f}) "
+              f"checks={rec['checks']}\"")
+        print(f"# wrote {args.json or DEFAULT_SERVE_JSON}", file=sys.stderr)
+        if args.check and not rec["ok"]:
+            for name, ok in rec["checks"].items():
+                if not ok:
+                    print(f"# REGRESSION serve: {name} failed",
+                          file=sys.stderr)
+            sys.exit(1)
+        return
     # The records flags act on the kernel sweep; an --only for a different
     # section means there are no kernel records to write or gate.
     records_mode = (args.smoke or args.json or args.check) and (

@@ -23,7 +23,10 @@ def main():
     cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
            "--smoke", "--batch", str(args.batch),
            "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]
-    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    src = os.path.join(REPO, "src")
+    existing = os.environ.get("PYTHONPATH")
+    env = {**os.environ,
+           "PYTHONPATH": src + (os.pathsep + existing if existing else "")}
     raise SystemExit(subprocess.call(cmd, env=env))
 
 

@@ -1,52 +1,122 @@
-"""Serving launcher: batched prefill + decode over the KV/SSM cache.
+"""Serving launcher: a thin CLI over the continuous-batching engine.
 
+  # N identical requests through the slot pool (old lockstep shape):
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --smoke --batch 4 --prompt-len 32 --gen 32
 
-Serving semantics: a batch of requests is prefillied together (one
-``prefill`` lowering), the per-layer caches are copied into a max-length
-ring allocation, and ``decode_step`` runs autoregressively with greedy
-sampling.  The same step functions are what the decode_* dry-run cells
-lower at production shapes.
+  # Poisson-arrival trace with per-request prompt/gen lengths:
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --smoke --trace 12 --rate 40 --batch 4
+
+Requests are prefilled individually (one lowering per distinct prompt
+length), grafted into a slot-pooled KV/SSM cache, and decoded by one
+fused jitted tick over the whole pool with per-slot sequence positions —
+greedy or temperature/top-k sampling through the Goldschmidt softmax
+runs inside the jit.  ``--scheduler static`` degrades to the lockstep
+baseline for comparison; ``benchmarks/bench_serve.py`` automates that
+comparison into ``BENCH_serve.json``.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import api
+from repro.serving import Engine, EngineConfig, Request
 
 
-def grow_cache(cfg, states, batch: int, s_max: int, dtype):
-    """Copy prefill-length caches into max-length decode allocations."""
-    full = api.make_cache(cfg, batch, s_max, dtype)
+def build_requests(args, cfg, rng: np.random.RandomState):
+    """Either --batch identical requests at t=0, or a Poisson trace."""
+    frames = None
+    if cfg.family == "encdec":
+        frames = lambda: (rng.randn(cfg.enc_seq, cfg.d_model)  # noqa: E731
+                          .astype(np.float32) * 0.1)
+    if args.prompt_len < 1 or args.gen < 1:
+        raise SystemExit("--prompt-len and --gen must be >= 1")
+    if args.trace and args.rate <= 0:
+        raise SystemExit("--rate must be > 0 (requests/second)")
+    if not args.trace:
+        return [
+            Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab, (args.prompt_len,)),
+                    max_new_tokens=args.gen,
+                    temperature=args.temperature,
+                    frames=frames() if frames else None)
+            for i in range(args.batch)]
+    # Poisson arrivals at --rate req/s; prompt/gen drawn uniformly from
+    # [len/2, len] so slots churn at different times.
+    t = 0.0
+    reqs = []
+    for i in range(args.trace):
+        t += float(rng.exponential(1.0 / args.rate))
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.randint(
+                0, cfg.vocab,
+                (int(rng.randint(max(1, args.prompt_len // 2),
+                                 args.prompt_len + 1)),)),
+            max_new_tokens=int(rng.randint(max(1, args.gen // 2),
+                                           args.gen + 1)),
+            temperature=args.temperature,
+            arrival_time=t,
+            frames=frames() if frames else None))
+    return reqs
 
-    def graft(dst, src):
-        if dst.ndim >= 3 and dst.shape != src.shape:
-            # KV caches: (G, b, S, KH, hd) or (L, b, S, KH, hd); S differs.
-            sl = [slice(None)] * dst.ndim
-            sl[2] = slice(0, src.shape[2])
-            return dst.at[tuple(sl)].set(src.astype(dst.dtype))
-        return src.astype(dst.dtype)
 
-    return jax.tree.map(graft, full, states)
+def report(outs, metrics, scheduler: str) -> None:
+    ttfts = sorted(metrics.ttft_s.values())
+    print(f"[{scheduler}] {metrics.n_requests} requests through "
+          f"{metrics.n_slots} slots: "
+          f"prefill {metrics.prefill_tokens} prompt tokens "
+          f"(+{metrics.first_tokens} first tokens) in "
+          f"{metrics.prefill_time_s * 1e3:.1f} ms")
+    if metrics.decode_ticks:
+        print(f"  decode: {metrics.decode_tokens} tokens in "
+              f"{metrics.decode_ticks} ticks / "
+              f"{metrics.decode_time_s * 1e3:.1f} ms "
+              f"({metrics.decode_tok_per_s:.1f} tok/s, "
+              f"occupancy {metrics.occupancy:.2f})")
+    else:
+        print("  decode: no steps (every request finished at prefill; "
+              "gen budget 1)")
+    if ttfts:
+        print(f"  TTFT ms: min {ttfts[0] * 1e3:.1f} / "
+              f"median {ttfts[len(ttfts) // 2] * 1e3:.1f} / "
+              f"max {ttfts[-1] * 1e3:.1f}")
+    print("sample generations (token ids):")
+    for rid in sorted(outs)[:4]:
+        print(f"  req {rid}:", outs[rid].tokens[:24].tolist())
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b", choices=configs.ARCH_IDS)
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=configs.ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="slot-pool width; without --trace, also the "
+                         "number of requests")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", type=int, default=0, metavar="N",
+                    help="serve N Poisson-arrival requests with varied "
+                         "prompt/gen lengths instead of a uniform batch")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="--trace arrival rate, requests/second")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples via the Goldschmidt "
+                         "softmax")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--scheduler", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the pre-compile pass; reported TTFT then "
+                         "includes one-time jit compilation")
     ap.add_argument("--autotune", action="store_true",
                     help="pre-tune kernel configs for this serving shape "
                          "(persists to the tuning cache) and serve with "
@@ -76,51 +146,19 @@ def main() -> None:
             print(f"autotune {res.kernel}: {res.config} "
                   f"({src}, {res.us_per_call:.0f} us/call)")
         print(f"tuning cache: {tuning.cache_path()}")
+
     rng = np.random.RandomState(args.seed)
     params = api.init(cfg, jax.random.key(args.seed))
-
-    batch = {"tokens": jnp.asarray(
-        rng.randint(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)}
-    if cfg.pos == "mrope":
-        pos = jnp.broadcast_to(
-            jnp.arange(args.prompt_len, dtype=jnp.int32),
-            (3, args.batch, args.prompt_len))
-        batch["pos_ids"] = pos
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.randn(args.batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
-
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
-
-    t0 = time.perf_counter()
-    logits, states, idx = prefill(params, batch)
-    cache = grow_cache(cfg, states, args.batch, s_max, jnp.dtype(cfg.dtype))
-    token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(token)
-    t_prefill = time.perf_counter() - t0
-
-    out_tokens = [token]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        step_batch = {"token": token}
-        if cfg.pos == "mrope":
-            step_batch["pos_ids"] = jnp.full(
-                (3, args.batch, 1), args.prompt_len + i, jnp.int32)
-        lg, cache = decode(params, cache, jnp.int32(args.prompt_len + i),
-                           step_batch)
-        token = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-        out_tokens.append(token)
-    jax.block_until_ready(token)
-    t_decode = time.perf_counter() - t0
-
-    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms; "
-          f"decode {args.gen-1} steps in {t_decode*1e3:.1f} ms "
-          f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.1f} tok/s)")
-    print("sample generations (token ids):")
-    for row in gen[:4]:
-        print(" ", row[:24].tolist())
+    engine = Engine(cfg, params, EngineConfig(
+        n_slots=args.batch, s_max=s_max, top_k=args.top_k, seed=args.seed))
+    reqs = build_requests(args, cfg, rng)
+    if not args.no_warmup:
+        # compile prefill (per distinct length) + the tick up front so the
+        # reported TTFT/tok-s measure serving, not one-time XLA lowering
+        engine.warmup(sorted({r.prompt_len for r in reqs}),
+                      stochastic=args.temperature > 0)
+    outs, metrics = engine.run(reqs, scheduler=args.scheduler)
+    report(outs, metrics, args.scheduler)
 
 
 if __name__ == "__main__":

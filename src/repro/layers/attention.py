@@ -295,7 +295,7 @@ def decode_attention(
     q: jnp.ndarray,        # (b, 1, H, hd)
     k_cache: jnp.ndarray,  # (b, S, KH, hd)
     v_cache: jnp.ndarray,
-    cur_index: jnp.ndarray,  # scalar int32: number of valid cache slots - 1
+    cur_index: jnp.ndarray,  # int32 scalar or (b,): valid cache slots - 1
     *,
     policy: NumericsPolicy,
     sm_scale: Optional[float] = None,
@@ -310,7 +310,10 @@ def decode_attention(
         "bkgd,btkd->bkgt", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
     ) * sm_scale  # (b, kh, g, S)
     pos = jnp.arange(S)[None, None, None, :]
-    logits = jnp.where(pos <= cur_index, logits, NEG_INF)
+    cur = jnp.asarray(cur_index)
+    if cur.ndim == 1:  # per-slot sequence lengths (continuous batching)
+        cur = cur[:, None, None, None]
+    logits = jnp.where(pos <= cur, logits, NEG_INF)
     probs = policy.softmax(logits, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache.astype(jnp.float32))
     return o.reshape(b, 1, h, hd).astype(q.dtype)
@@ -320,7 +323,18 @@ def cache_update(
     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     k_new: jnp.ndarray, v_new: jnp.ndarray, cur_index: jnp.ndarray,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Insert (b, 1, KH, hd) new K/V at cur_index along the S axis."""
+    """Insert (b, 1, KH, hd) new K/V at cur_index along the S axis.
+
+    ``cur_index`` may be a scalar (lockstep batch) or a (b,) vector of
+    per-slot write positions (continuous batching).
+    """
+    cur = jnp.asarray(cur_index)
+    if cur.ndim == 1:
+        row = jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+        )
+        return (row(k_cache, k_new.astype(k_cache.dtype), cur),
+                row(v_cache, v_new.astype(v_cache.dtype), cur))
     k_cache = jax.lax.dynamic_update_slice_in_dim(
         k_cache, k_new.astype(k_cache.dtype), cur_index, axis=1
     )

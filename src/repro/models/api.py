@@ -43,6 +43,8 @@ def prefill(cfg: ArchConfig, params, batch):
 
 
 def decode_step(cfg: ArchConfig, params, states, cur_index, batch):
+    """One decode step; ``cur_index`` is a scalar (lockstep) or a (b,)
+    per-slot position vector (the serving engine's continuous batching)."""
     if is_encdec(cfg):
         return encdec.decode_step(cfg, params, states, cur_index, batch["token"])
     return transformer.decode_step(cfg, params, states, cur_index, batch["token"],

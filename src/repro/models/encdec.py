@@ -150,12 +150,15 @@ def _dec_stack(cfg: ArchConfig, params: Params, x, enc_out, *, mode: str,
 
 def _embed_dec(cfg, params, tokens, cur_index=None):
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
-    if cur_index is not None:
+    if cur_index is not None and jnp.ndim(cur_index) == 1:
+        # per-slot decode positions (continuous batching): (b, 1, d)
+        pe = jnp.take(params["pos_embed"], cur_index, axis=0)[:, None]
+    elif cur_index is not None:
         pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], cur_index,
-                                          tokens.shape[1], axis=0)
+                                          tokens.shape[1], axis=0)[None]
     else:
-        pe = params["pos_embed"][: tokens.shape[1]]
-    return x + pe[None].astype(cfg.dtype)
+        pe = params["pos_embed"][: tokens.shape[1]][None]
+    return x + pe.astype(cfg.dtype)
 
 
 def _unembed(cfg, params, x):

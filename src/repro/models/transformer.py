@@ -54,10 +54,17 @@ def init(cfg: ArchConfig, rng) -> Params:
 def _rope_info(cfg: ArchConfig, batch: int, seq: int,
                pos_ids: Optional[jnp.ndarray],
                cur_index: Optional[jnp.ndarray] = None):
-    """cos/sin for the whole stack (shared across layers)."""
+    """cos/sin for the whole stack (shared across layers).
+
+    ``cur_index`` may be a scalar (lockstep decode) or a (b,) vector of
+    per-slot positions (continuous batching).
+    """
     if cfg.pos == "rope":
         if cur_index is not None:
-            positions = jnp.full((batch, seq), 0, jnp.int32) + cur_index
+            cur = jnp.asarray(cur_index, jnp.int32)
+            if cur.ndim == 1:
+                cur = cur[:, None]
+            positions = jnp.full((batch, seq), 0, jnp.int32) + cur
         else:
             positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
                                          (batch, seq))
@@ -73,13 +80,16 @@ def embed_tokens(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
                  cur_index: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
     if cfg.pos == "learned":
-        if cur_index is not None:
+        if cur_index is not None and jnp.ndim(cur_index) == 1:
+            # per-slot positions: (b,) gather, decode seq is 1
+            pe = jnp.take(params["pos_embed"], cur_index, axis=0)[:, None]
+        elif cur_index is not None:
             pe = jax.lax.dynamic_slice_in_dim(
                 params["pos_embed"], cur_index, tokens.shape[1], axis=0
-            )
+            )[None]
         else:
-            pe = params["pos_embed"][: tokens.shape[1]]
-        x = x + pe[None].astype(cfg.dtype)
+            pe = params["pos_embed"][: tokens.shape[1]][None]
+        x = x + pe.astype(cfg.dtype)
     return x
 
 
@@ -191,7 +201,11 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
 
 def decode_step(cfg: ArchConfig, params: Params, states, cur_index: jnp.ndarray,
                 token: jnp.ndarray, pos_ids: Optional[jnp.ndarray] = None):
-    """One decode step: token (b, 1) -> (logits (b, 1, V), new states)."""
+    """One decode step: token (b, 1) -> (logits (b, 1, V), new states).
+
+    ``cur_index`` is a scalar for lockstep batches or a (b,) vector of
+    per-slot sequence positions (the serving engine's slot pool).
+    """
     b = token.shape[0]
     rope_cs = _rope_info(cfg, b, 1, pos_ids, cur_index=cur_index)
     x = embed_tokens(cfg, params, token,

@@ -1,0 +1,13 @@
+"""Continuous-batching serving: engine, slot-pooled cache, sampler.
+
+The serving echo of the paper's hardware reduction: one resident decode
+datapath (the jitted tick) kept busy by independent in-flight requests
+instead of a lockstep batch that forms and finishes together.
+"""
+
+from repro.serving.cache import SlotCachePool, grow_cache  # noqa: F401
+from repro.serving.engine import (Engine, EngineConfig,  # noqa: F401
+                                  ServeMetrics, generate_sequential)
+from repro.serving.requests import (Request, RequestOutput,  # noqa: F401
+                                    RequestState)
+from repro.serving.sampler import sample_tokens  # noqa: F401

@@ -1,0 +1,128 @@
+"""Slot-pooled decode cache: per-slot allocate / write / reset / free.
+
+The pool is one resident cache pytree (``api.make_cache`` at the full
+slot count and max sequence length); every model family stacks its state
+leaves as ``(groups_or_layers, batch, ...)``, so **axis 1 is the slot
+axis** for every leaf — KV caches, SSM states and conv tails alike.
+
+Grafting a prefill-length state into a pool row is structural, not
+heuristic: a source leaf must match its destination rank with every axis
+``<=`` the destination's, and is written at the origin with one
+``dynamic_update_slice``.  Axes the prefill emitted short (the sequence
+axis of KV caches) land left-aligned; everything else (SSM/conv states,
+cross-attention caches at full length) is replaced whole.  This subsumes
+the old ``grow_cache`` ``dst.ndim >= 3`` special case.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+
+def _graft_leaf(dst: jnp.ndarray, src: jnp.ndarray, origin) -> jnp.ndarray:
+    if dst.ndim != src.ndim:
+        raise ValueError(
+            f"cache graft rank mismatch: {src.shape} into {dst.shape}")
+    for axis, (d, s) in enumerate(zip(dst.shape, src.shape)):
+        if s > d:
+            raise ValueError(
+                f"cache graft axis {axis} overflows: {src.shape} "
+                f"into {dst.shape}")
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), origin)
+
+
+# Jitted + donated pool-row ops: the slot index is a traced operand, so
+# one compilation covers every slot, and donation lets XLA update the
+# resident pool in place instead of copying every leaf per admission.
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_row(cache, states, slot):
+    return jax.tree.map(
+        lambda dst, src: _graft_leaf(
+            dst, src, (0, slot) + (0,) * (dst.ndim - 2)),
+        cache, states)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _zero_row(cache, slot):
+    def z(a):
+        row = jnp.zeros(a.shape[:1] + (1,) + a.shape[2:], a.dtype)
+        return jax.lax.dynamic_update_slice(
+            a, row, (0, slot) + (0,) * (a.ndim - 2))
+
+    return jax.tree.map(z, cache)
+
+
+def grow_cache(cfg: ArchConfig, states, batch: int, s_max: int, dtype):
+    """Copy prefill-length caches into max-length decode allocations."""
+    full = api.make_cache(cfg, batch, s_max, dtype)
+    return jax.tree.map(
+        lambda dst, src: _graft_leaf(dst, src, (0,) * dst.ndim),
+        full, states)
+
+
+class SlotCachePool:
+    """``n_slots`` resident cache rows shared by a churn of requests.
+
+    The serving analogue of the paper's reused datapath: one allocation,
+    many independent in-flight operands.  ``alloc``/``free`` manage the
+    free list; ``write`` grafts a batch-1 prefill state into a row.
+
+    Recycling cannot leak the previous request's state because ``write``
+    replaces every whole-shape leaf of the row outright (SSM/conv
+    states, cross-attention caches — exactly the leaves that are live
+    inputs with no masking), while KV rows beyond the graft are hidden
+    by the ``pos <= cur_index`` decode mask until the decode loop
+    overwrites them contiguously.  ``free`` therefore does NOT pay an
+    O(pool) zeroing pass per completion; ``reset`` exists for explicit
+    hygiene (tests, debugging).
+    """
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, s_max: int, dtype):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        assert s_max <= cfg.max_seq, (s_max, cfg.max_seq)
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.cache = api.make_cache(cfg, n_slots, s_max, dtype)
+        self._free: List[int] = list(range(n_slots))
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self) -> int:
+        """Claim a free slot; raises if none (callers check free_slots)."""
+        if not self._free:
+            raise RuntimeError("no free slot")
+        return self._free.pop(0)
+
+    def free(self, slot: int) -> None:
+        """Return a slot to the free list (no zeroing — see class doc)."""
+        if slot in self._free or not 0 <= slot < self.n_slots:
+            raise ValueError(f"bad free of slot {slot}")
+        self._free.append(slot)
+        self._free.sort()
+
+    def reset(self, slot: int) -> None:
+        self.cache = _zero_row(self.cache, jnp.int32(slot))
+
+    def write(self, slot: int, states: Any) -> None:
+        """Graft a batch-1 prefill state pytree into the slot's row."""
+        self.cache = _write_row(self.cache, states, jnp.int32(slot))
+
+    def row(self, slot: int) -> Any:
+        """The slot's cache row (leading axes kept), for tests/debugging."""
+        return jax.tree.map(lambda a: a[:, slot], self.cache)

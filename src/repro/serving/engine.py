@@ -1,0 +1,385 @@
+"""Continuous-batching serving engine.
+
+One resident decode step serves a churning pool of requests — the
+distributed-systems echo of the paper's feedback datapath (one reused
+multiplier, many operands in flight; Lunglmayr's non-sequential divider
+makes the same throughput argument at the FPGA level).  The loop:
+
+    admission queue -> slot scheduler -> mixed prefill/decode ticks
+                    -> completion / slot eviction
+
+* **Prefill** runs per request at its own prompt length (one lowering per
+  distinct length) and grafts the batch-1 state into a
+  :class:`~repro.serving.cache.SlotCachePool` row; the first token is
+  sampled from the prefill logits (that timestamp is TTFT).
+* **Decode ticks** run ONE fused jitted step over the whole pool with a
+  per-slot ``cur_index`` vector; sampling (greedy / temperature / top-k
+  through the Goldschmidt softmax) happens inside the jit, so only the
+  (n_slots,) chosen token ids cross to the host per tick.
+* Finished requests free their slot and the next queued request takes
+  it mid-flight; recycling cannot leak stale state because the prefill
+  graft replaces the unmasked leaves (SSM/conv/cross-KV) whole and the
+  decode mask hides KV rows beyond ``cur_index`` (see cache.py).
+
+``scheduler='static'`` degrades the same machinery to lockstep batching
+(admit a full group, no admission until the whole group finishes) — the
+baseline ``BENCH_serve.json`` compares against.
+
+Caveat: MoE capacity grouping couples batch rows (tokens from different
+slots compete for expert capacity), so engine outputs for MoE archs can
+diverge from sequential runs when groups fill up — raise
+``capacity_factor`` for strict parity, as the decode-consistency tests
+do.  Dense / SSM / encdec rows are independent and match token-for-token
+(greedy, fp32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.serving.cache import SlotCachePool
+from repro.serving.requests import (FINISHED, QUEUED, RUNNING, Request,
+                                    RequestOutput, RequestState)
+from repro.serving.sampler import sample_tokens
+
+SCHEDULERS = ("continuous", "static")
+
+
+def prefill_batch(cfg: ArchConfig, req: Request) -> dict:
+    """Batch-1 prefill inputs for one request (tokens, mrope ids, frames).
+
+    Shared by the engine and the sequential parity reference so the two
+    can never diverge on input construction.
+    """
+    batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+    if cfg.pos == "mrope":
+        batch["pos_ids"] = jnp.broadcast_to(
+            jnp.arange(req.prompt_len, dtype=jnp.int32),
+            (3, 1, req.prompt_len))
+    if req.frames is not None:
+        batch["frames"] = jnp.asarray(req.frames, cfg.dtype)[None]
+    return batch
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4
+    s_max: int = 0  # 0 -> cfg.max_seq
+    max_prefill_per_tick: int = 1  # prefills admitted between decode ticks
+    top_k: int = 0  # static sampling knob (0 = full vocab)
+    seed: int = 0   # PRNG stream for stochastic sampling
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    n_requests: int = 0
+    prefill_tokens: int = 0   # prompt tokens processed by prefill
+    first_tokens: int = 0     # tokens sampled from prefill logits
+    decode_tokens: int = 0    # tokens sampled from decode ticks
+    decode_ticks: int = 0
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
+    occupancy_ticks: int = 0  # sum over ticks of active slots
+    n_slots: int = 0
+    makespan_s: float = 0.0   # first admission -> last completion
+    ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        if self.decode_ticks == 0:  # e.g. every request had --gen 1
+            return 0.0
+        return self.decode_tokens / max(self.decode_time_s, 1e-9)
+
+    @property
+    def aggregate_tok_per_s(self) -> float:
+        """Useful generated tokens over the whole serve wall time — the
+        scheduler-level throughput (what continuous batching improves)."""
+        if self.makespan_s <= 0:
+            return 0.0
+        return (self.first_tokens + self.decode_tokens) / self.makespan_s
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of pool slots doing useful work per decode tick."""
+        if self.decode_ticks == 0:
+            return 0.0
+        return self.occupancy_ticks / (self.decode_ticks * self.n_slots)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["decode_tok_per_s"] = self.decode_tok_per_s
+        d["aggregate_tok_per_s"] = self.aggregate_tok_per_s
+        d["occupancy"] = self.occupancy
+        d["ttft_s"] = {str(k): v for k, v in self.ttft_s.items()}
+        return d
+
+
+class Engine:
+    """Continuous-batching engine over one model + one slot pool."""
+
+    def __init__(self, cfg: ArchConfig, params,
+                 engine_cfg: Optional[EngineConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = engine_cfg or EngineConfig()
+        self.s_max = self.ecfg.s_max or cfg.max_seq
+        self._policy = cfg.policy()
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = make_decode_step(cfg)
+        self._tick_fns: Dict[bool, object] = {}
+        self._first_fns: Dict[bool, object] = {}
+        self._key = jax.random.key(self.ecfg.seed)
+        self._tick_count = 0
+
+    # -- fused jitted steps --------------------------------------------------
+
+    def _tick_fn(self, stochastic: bool):
+        if stochastic not in self._tick_fns:
+            cfg, policy, top_k = self.cfg, self._policy, self.ecfg.top_k
+            decode = self._decode
+
+            def tick(params, cache, cur_index, tokens, temps, key):
+                step = {"token": tokens}
+                if cfg.pos == "mrope":
+                    # text-style positions: the three streams coincide
+                    step["pos_ids"] = jnp.broadcast_to(
+                        cur_index[None, :, None], (3, tokens.shape[0], 1))
+                logits, cache = decode(params, cache, cur_index, step)
+                nxt = sample_tokens(
+                    logits[:, -1, :], policy=policy,
+                    temperature=temps if stochastic else 0.0, top_k=top_k,
+                    key=key if stochastic else None)
+                return nxt, cache
+
+            self._tick_fns[stochastic] = jax.jit(tick, donate_argnums=(1,))
+        return self._tick_fns[stochastic]
+
+    def _first_fn(self, stochastic: bool):
+        if stochastic not in self._first_fns:
+            policy, top_k = self._policy, self.ecfg.top_k
+
+            def first(logits, temp, key):
+                return sample_tokens(
+                    logits[:, -1, :], policy=policy,
+                    temperature=temp if stochastic else 0.0, top_k=top_k,
+                    key=key if stochastic else None)
+
+            self._first_fns[stochastic] = jax.jit(first)
+        return self._first_fns[stochastic]
+
+    def _next_key(self):
+        self._tick_count += 1
+        return jax.random.fold_in(self._key, self._tick_count)
+
+    # -- request plumbing ----------------------------------------------------
+
+    def _validate(self, req: Request) -> None:
+        if req.prompt_len + req.max_new_tokens - 1 > self.s_max:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + gen "
+                f"{req.max_new_tokens} exceeds s_max={self.s_max}")
+        if self.cfg.family == "encdec" and req.frames is None:
+            raise ValueError(f"request {req.rid}: encdec needs frames")
+
+    def _do_prefill(self, st: RequestState, pool: SlotCachePool,
+                    metrics: ServeMetrics, clock) -> None:
+        req = st.request
+        stochastic = req.temperature > 0
+        t0 = time.perf_counter()
+        logits, states, _ = self._prefill(self.params,
+                                          prefill_batch(self.cfg, req))
+        first = self._first_fn(stochastic)(
+            logits, jnp.float32(req.temperature),
+            self._next_key() if stochastic else self._key)
+        token = int(jax.block_until_ready(first)[0])
+        st.slot = pool.alloc()
+        pool.write(st.slot, states)
+        # settle the graft inside the prefill window so its async device
+        # work isn't billed to the next decode tick's timing
+        jax.block_until_ready(pool.cache)
+        metrics.prefill_time_s += time.perf_counter() - t0
+        st.tokens.append(token)
+        st.t_first_token = clock()
+        st.status = RUNNING
+        metrics.prefill_tokens += req.prompt_len
+        metrics.first_tokens += 1
+        metrics.ttft_s[req.rid] = st.ttft
+
+    def _finish(self, st: RequestState, pool: SlotCachePool, clock) -> None:
+        st.t_finish = clock()
+        st.status = FINISHED
+        pool.free(st.slot)
+        st.slot = -1
+
+    # -- the serve loop ------------------------------------------------------
+
+    def run(self, requests: Sequence[Request], *,
+            scheduler: str = "continuous") -> (
+            Dict[int, RequestOutput], ServeMetrics):
+        """Serve ``requests`` to completion; returns (outputs, metrics).
+
+        The engine clock is wall time from call start; a request with
+        ``arrival_time`` in the future is invisible to the scheduler
+        until the clock passes it (the loop sleeps when idle).
+        """
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"scheduler must be one of {SCHEDULERS}")
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("duplicate request rids: outputs are keyed "
+                             "by rid")
+        for req in requests:
+            self._validate(req)
+        n = self.ecfg.n_slots
+        pool = SlotCachePool(self.cfg, n, self.s_max,
+                             jnp.dtype(self.cfg.dtype))
+        metrics = ServeMetrics(n_requests=len(requests), n_slots=n)
+        t_start = time.perf_counter()
+        clock = lambda: time.perf_counter() - t_start  # noqa: E731
+
+        states: List[RequestState] = [
+            RequestState(r, t_arrive=r.arrival_time)
+            for r in sorted(requests, key=lambda r: (r.arrival_time, r.rid))]
+        pending: List[RequestState] = list(states)
+        ready: List[RequestState] = []
+        active: Dict[int, RequestState] = {}  # slot -> state
+
+        # host-side mirrors of the per-slot device vectors
+        cur = np.zeros(n, np.int32)
+        last_tok = np.zeros(n, np.int32)
+        temps = np.zeros(n, np.float32)
+
+        def admit_arrivals():
+            now = clock()
+            while pending and pending[0].t_arrive <= now:
+                st = pending.pop(0)
+                st.status = QUEUED
+                ready.append(st)
+
+        def start(st: RequestState):
+            self._do_prefill(st, pool, metrics, clock)
+            if st.done:  # max_new_tokens == 1: no decode steps at all
+                self._finish(st, pool, clock)
+                return
+            active[st.slot] = st
+            cur[st.slot] = st.cur_index
+            last_tok[st.slot] = st.tokens[-1]
+            temps[st.slot] = st.request.temperature
+
+        while pending or ready or active:
+            admit_arrivals()
+            if scheduler == "continuous":
+                budget = self.ecfg.max_prefill_per_tick
+                while ready and pool.free_slots and budget > 0:
+                    start(ready.pop(0))
+                    budget -= 1
+            else:  # static lockstep: full group in, nothing until group out
+                if not active and ready:
+                    while ready and pool.free_slots:
+                        start(ready.pop(0))
+
+            if not active:
+                if pending:  # idle until the next arrival
+                    time.sleep(max(0.0, min(
+                        pending[0].t_arrive - clock(), 0.005)))
+                continue
+
+            stochastic = bool(np.any(temps[list(active)] > 0))
+            t0 = time.perf_counter()
+            nxt, pool.cache = self._tick_fn(stochastic)(
+                self.params, pool.cache, jnp.asarray(cur),
+                jnp.asarray(last_tok[:, None]), jnp.asarray(temps),
+                self._next_key() if stochastic else self._key)
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            metrics.decode_time_s += time.perf_counter() - t0
+            metrics.decode_ticks += 1
+            metrics.occupancy_ticks += len(active)
+            metrics.decode_tokens += len(active)
+
+            for slot in list(active):
+                st = active[slot]
+                st.tokens.append(int(nxt[slot]))
+                if st.done:
+                    # Under 'static' the freed slot stays unused (and its
+                    # lane keeps burning in every tick) until the whole
+                    # group drains — admission is gated on `not active`.
+                    del active[slot]
+                    self._finish(st, pool, clock)
+                else:
+                    cur[slot] = st.cur_index
+                    last_tok[slot] = st.tokens[-1]
+
+        metrics.makespan_s = clock()
+        outputs = {}
+        for st in states:
+            assert st.status == FINISHED, (st.request.rid, st.status)
+            outputs[st.request.rid] = RequestOutput(
+                rid=st.request.rid,
+                prompt_len=st.request.prompt_len,
+                tokens=np.asarray(st.tokens, np.int32),
+                ttft_s=st.ttft,
+                finish_s=st.t_finish - st.t_arrive,
+            )
+        return outputs, metrics
+
+    def warmup(self, prompt_lens: Sequence[int], *,
+               stochastic: bool = False) -> None:
+        """Pre-compile prefill (per length) and the decode tick."""
+        reqs = [
+            Request(rid=-1000 - i, prompt=np.zeros(s, np.int32),
+                    # a boundary prompt (s == s_max) only fits gen 1; its
+                    # tick compiles via the other lengths or on first run
+                    max_new_tokens=2 if s + 1 <= self.s_max else 1,
+                    temperature=0.5 if stochastic else 0.0,
+                    frames=(np.zeros((self.cfg.enc_seq, self.cfg.d_model),
+                                     np.float32)
+                            if self.cfg.family == "encdec" else None))
+            for i, s in enumerate(prompt_lens)]
+        self.run(reqs)
+
+
+_SEQ_FNS: Dict[ArchConfig, tuple] = {}  # jit cache across reference calls
+
+
+def generate_sequential(cfg: ArchConfig, params, request: Request, *,
+                        top_k: int = 0,
+                        s_max: Optional[int] = None) -> np.ndarray:
+    """Single-request greedy reference: prefill + batch-1 decode loop.
+
+    Uses the same model entry points and the same sampler as the engine,
+    so an engine-vs-sequential mismatch isolates the serving machinery
+    (slot pool, per-slot cur_index, recycling) rather than sampler or
+    kernel noise.  Stochastic requests are out of scope — PRNG streams
+    depend on tick composition.
+    """
+    assert request.temperature == 0.0, "reference is greedy-only"
+    policy = cfg.policy()
+    s_max = s_max or cfg.max_seq
+    if cfg not in _SEQ_FNS:
+        _SEQ_FNS[cfg] = (jax.jit(make_prefill_step(cfg)),
+                         jax.jit(make_decode_step(cfg), donate_argnums=(1,)))
+    prefill, decode = _SEQ_FNS[cfg]
+
+    logits, states, _ = prefill(params, prefill_batch(cfg, request))
+    from repro.serving.cache import grow_cache
+
+    cache = grow_cache(cfg, states, 1, s_max, jnp.dtype(cfg.dtype))
+    out = [int(sample_tokens(logits[:, -1, :], policy=policy, top_k=top_k)[0])]
+    for i in range(request.max_new_tokens - 1):
+        cur = jnp.int32(request.prompt_len + i)
+        step = {"token": jnp.asarray([[out[-1]]], jnp.int32)}
+        if cfg.pos == "mrope":
+            step["pos_ids"] = jnp.full((3, 1, 1), request.prompt_len + i,
+                                       jnp.int32)
+        lg, cache = decode(params, cache, cur, step)
+        out.append(int(sample_tokens(lg[:, -1, :], policy=policy,
+                                     top_k=top_k)[0]))
+    return np.asarray(out, np.int32)

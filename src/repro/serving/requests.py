@@ -1,0 +1,88 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A :class:`Request` is what a client submits: prompt tokens, a generation
+budget and sampling knobs.  The engine wraps it in a
+:class:`RequestState` that tracks the slot assignment, the emitted
+tokens and the latency timestamps (arrival -> first token -> finish),
+from which TTFT and per-request decode throughput derive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+QUEUED = "queued"      # admitted, waiting for a free slot
+RUNNING = "running"    # prefilled into a slot, decoding
+FINISHED = "finished"  # generation budget exhausted, slot freed
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``temperature == 0`` is greedy; ``> 0`` samples from the Goldschmidt
+    softmax (top-k is an engine-wide static knob, see ``EngineConfig``).
+    ``arrival_time`` is seconds from trace start — the engine admits the
+    request only once its clock passes it (Poisson traces in serve.py).
+    ``frames`` carries the precomputed encoder input for encdec archs.
+    """
+
+    rid: int
+    prompt: np.ndarray  # (s,) int32 token ids
+    max_new_tokens: int
+    temperature: float = 0.0
+    arrival_time: float = 0.0
+    frames: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"request {self.rid}: max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Engine-side view of one in-flight request."""
+
+    request: Request
+    status: str = QUEUED
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_arrive: float = 0.0       # engine-clock seconds
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+
+    @property
+    def cur_index(self) -> int:
+        """Next cache write position = prompt + tokens generated so far - 1
+        (the last sampled token has not been fed to the model yet)."""
+        return self.request.prompt_len + len(self.tokens) - 1
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.request.max_new_tokens
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_arrive
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """What the engine hands back per request."""
+
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray  # (max_new_tokens,) int32, first token from prefill
+    ttft_s: float
+    finish_s: float  # arrival -> last token, engine-clock seconds

@@ -1,0 +1,58 @@
+"""Token sampling with the Goldschmidt softmax on the hot path.
+
+``sample_tokens`` is pure and jittable — the engine fuses it with the
+decode step so the per-token argmax/sampling runs on-device and only the
+chosen token ids cross to the host (no per-token logits transfer).
+
+Both paths route the probability normalization through
+``policy.softmax`` — a Goldschmidt reciprocal of the denominator — so
+division sits on the sampling hot path exactly like in the attention
+epilogues.  Greedy takes argmax over those probabilities (the per-row
+reciprocal is a single positive factor, so the ordering is the logits'
+ordering); stochastic sampling inverts the CDF at a uniform draw.
+``temperature`` may be a (b,) vector so greedy and sampling requests
+share one fused tick; ``top_k`` is static (it shapes the lowering).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import NumericsPolicy
+from repro.layers.attention import NEG_INF  # the shared masking constant
+
+
+def sample_tokens(
+    logits: jnp.ndarray,  # (b, V) last-position logits
+    *,
+    policy: NumericsPolicy,
+    temperature=0.0,  # python float or (b,) array; 0 -> greedy per row
+    top_k: int = 0,   # static: 0 = full vocab
+    key: Optional[jax.Array] = None,  # required when any row samples
+) -> jnp.ndarray:
+    """Returns (b,) int32 token ids."""
+    lf = logits.astype(jnp.float32)
+    if top_k:
+        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf >= kth, lf, NEG_INF)  # ties at the kth value stay
+
+    temp = jnp.asarray(temperature, jnp.float32)
+    stochastic = key is not None
+    scale = jnp.where(temp > 0, temp, 1.0) if stochastic else 1.0
+    probs = policy.softmax(lf / jnp.reshape(scale, (-1, 1)), axis=-1) \
+        if stochastic else policy.softmax(lf, axis=-1)
+    greedy = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    if not stochastic:
+        return greedy
+
+    # minval keeps u strictly positive: u == 0 would satisfy cdf >= u*total
+    # at index 0 even when token 0 is top-k-masked (probability 0)
+    u = jax.random.uniform(key, (lf.shape[0], 1), jnp.float32,
+                           minval=jnp.finfo(jnp.float32).tiny)
+    cdf = jnp.cumsum(probs, axis=-1)
+    drawn = jnp.argmax(cdf >= u * cdf[:, -1:], axis=-1).astype(jnp.int32)
+    temp_rows = jnp.broadcast_to(jnp.atleast_1d(temp), (lf.shape[0],))
+    return jnp.where(temp_rows > 0, drawn, greedy)

@@ -92,7 +92,7 @@ class TestDecodeConsistency:
             atol=tol, rtol=tol)
 
         # grow cache to max_seq and continue token by token
-        from repro.launch.serve import grow_cache
+        from repro.serving.cache import grow_cache
 
         cache = grow_cache(cfg, states, b, cfg.max_seq, jnp.dtype(cfg.dtype))
         for t in range(split, s):

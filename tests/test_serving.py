@@ -1,0 +1,309 @@
+"""Continuous-batching engine: parity, slot recycling, sampler, pool.
+
+The load-bearing property is batched-vs-sequential parity: N staggered
+variable-length requests served through shared slots must match N
+independent single-request runs token-for-token (greedy, fp32).  That
+exercises the per-slot cur_index vector through attention masks, rope
+positions, cache writes and the slot pool in one shot.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import EXACT, GS_FEEDBACK
+from repro.models import api
+from repro.serving import (Engine, EngineConfig, Request, SlotCachePool,
+                           generate_sequential, sample_tokens)
+
+F32 = dict(dtype="float32", param_dtype="float32")
+
+
+def _requests(cfg, rng, specs):
+    """specs: list of (prompt_len, max_new_tokens, arrival_time)."""
+    return [
+        Request(rid=i, prompt=rng.randint(0, cfg.vocab, (s,)),
+                max_new_tokens=g, arrival_time=t,
+                frames=(rng.randn(cfg.enc_seq, cfg.d_model)
+                        .astype(np.float32) * 0.1
+                        if cfg.family == "encdec" else None))
+        for i, (s, g, t) in enumerate(specs)]
+
+
+def _assert_parity(cfg, params, reqs, outs):
+    for r in reqs:
+        ref = generate_sequential(cfg, params, r)
+        got = outs[r.rid].tokens
+        np.testing.assert_array_equal(
+            ref, got, err_msg=f"req {r.rid} (prompt {r.prompt_len}, "
+                              f"gen {r.max_new_tokens})")
+
+
+class TestEngineParity:
+    def test_staggered_variable_length_parity(self):
+        """3+ staggered requests, distinct prompt/gen lengths, 2 slots:
+        queueing + mid-flight admission + slot churn, token-for-token."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(0))
+        rng = np.random.RandomState(0)
+        reqs = _requests(cfg, rng, [(6, 5, 0.0), (9, 8, 0.0),
+                                    (4, 3, 0.02), (7, 6, 0.03)])
+        eng = Engine(cfg, params, EngineConfig(n_slots=2))
+        outs, metrics = eng.run(reqs)
+        _assert_parity(cfg, params, reqs, outs)
+        assert metrics.decode_ticks > 0
+        assert metrics.decode_tokens == sum(
+            r.max_new_tokens - 1 for r in reqs)
+        assert metrics.prefill_tokens == sum(r.prompt_len for r in reqs)
+        assert metrics.first_tokens == len(reqs)
+        assert set(metrics.ttft_s) == {r.rid for r in reqs}
+        assert all(t >= 0 for t in metrics.ttft_s.values())
+
+    def test_single_slot_recycling_no_stale_leak(self):
+        """n_slots=1 forces every request through the SAME slot: any
+        stale KV/SSM state leaking across free/alloc breaks parity."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(1))
+        rng = np.random.RandomState(1)
+        reqs = _requests(cfg, rng, [(8, 4, 0.0), (5, 6, 0.0), (10, 3, 0.0)])
+        eng = Engine(cfg, params, EngineConfig(n_slots=1))
+        outs, metrics = eng.run(reqs)
+        _assert_parity(cfg, params, reqs, outs)
+        assert metrics.occupancy == 1.0  # one slot, always busy
+
+    def test_ssm_state_recycling(self):
+        """Mamba SSM state is unmasked — recycling MUST zero it."""
+        cfg = configs.get_smoke("falcon-mamba-7b", **F32)
+        params = api.init(cfg, jax.random.key(2))
+        rng = np.random.RandomState(2)
+        reqs = _requests(cfg, rng, [(7, 5, 0.0), (4, 4, 0.0), (9, 6, 0.0)])
+        eng = Engine(cfg, params, EngineConfig(n_slots=1))
+        outs, _ = eng.run(reqs)
+        _assert_parity(cfg, params, reqs, outs)
+
+    def test_static_scheduler_matches_continuous_outputs(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(3))
+        rng = np.random.RandomState(3)
+        reqs = _requests(cfg, rng, [(6, 4, 0.0), (8, 7, 0.0), (5, 5, 0.0)])
+        eng = Engine(cfg, params, EngineConfig(n_slots=2))
+        outs_c, _ = eng.run(reqs, scheduler="continuous")
+        outs_s, m_s = eng.run(reqs, scheduler="static")
+        for r in reqs:
+            np.testing.assert_array_equal(outs_c[r.rid].tokens,
+                                          outs_s[r.rid].tokens)
+        assert m_s.decode_ticks > 0
+
+    def test_gen_1_no_decode_steps(self):
+        """max_new_tokens=1: first token from prefill, zero decode ticks,
+        tok/s reporting must not divide by zero."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(4))
+        rng = np.random.RandomState(4)
+        reqs = _requests(cfg, rng, [(6, 1, 0.0), (4, 1, 0.0)])
+        eng = Engine(cfg, params, EngineConfig(n_slots=2))
+        outs, metrics = eng.run(reqs)
+        assert metrics.decode_ticks == 0
+        assert metrics.decode_tok_per_s == 0.0
+        assert metrics.occupancy == 0.0
+        assert metrics.first_tokens == 2
+        for r in reqs:
+            assert outs[r.rid].tokens.shape == (1,)
+            np.testing.assert_array_equal(
+                generate_sequential(cfg, params, r), outs[r.rid].tokens)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("arch,over", [
+        ("jamba-1.5-large-398b", {"capacity_factor": 8.0}),
+        ("qwen2-vl-72b", {}),
+        ("whisper-large-v3", {}),
+    ])
+    def test_families_parity(self, arch, over):
+        """Hybrid (SSM+MoE), mrope VLM and encdec (learned positions,
+        cross-attention cache) through the per-slot decode path."""
+        cfg = configs.get_smoke(arch, **F32, **over)
+        params = api.init(cfg, jax.random.key(5))
+        rng = np.random.RandomState(5)
+        reqs = _requests(cfg, rng, [(4, 3, 0.0), (7, 5, 0.0), (10, 4, 0.0)])
+        eng = Engine(cfg, params, EngineConfig(n_slots=2))
+        outs, _ = eng.run(reqs)
+        _assert_parity(cfg, params, reqs, outs)
+
+
+class TestSlotCachePool:
+    def _pool(self, n_slots=3):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        return cfg, SlotCachePool(cfg, n_slots, 32, jnp.float32)
+
+    def test_alloc_free_cycle(self):
+        _, pool = self._pool(2)
+        a, b = pool.alloc(), pool.alloc()
+        assert {a, b} == {0, 1} and pool.free_slots == 0
+        with pytest.raises(RuntimeError):
+            pool.alloc()
+        pool.free(a)
+        assert pool.free_slots == 1 and pool.alloc() == a
+        with pytest.raises(ValueError):
+            pool.free(5)
+
+    def test_reset_zeroes_the_row_only(self):
+        cfg, pool = self._pool(2)
+        ones = jax.tree.map(lambda a: jnp.ones_like(a), pool.cache)
+        pool.cache = ones
+        pool.reset(0)
+        for leaf in jax.tree.leaves(pool.row(0)):
+            assert bool(jnp.all(leaf == 0))
+        for leaf in jax.tree.leaves(pool.row(1)):
+            assert bool(jnp.all(leaf == 1))
+
+    def test_write_grafts_prefill_row(self):
+        cfg, pool = self._pool(2)
+        b = {"tokens": jnp.zeros((1, 5), jnp.int32)}
+        params = api.init(cfg, jax.random.key(6))
+        _, states, _ = api.prefill(cfg, params, b)
+        pool.write(1, states)
+        row = pool.row(1)
+        # prompt-length KV landed left-aligned; slot 0 untouched
+        for dst, src in zip(jax.tree.leaves(row), jax.tree.leaves(states)):
+            np.testing.assert_array_equal(
+                np.asarray(dst[:, :5]), np.asarray(src[:, 0]))
+        for leaf in jax.tree.leaves(pool.row(0)):
+            assert bool(jnp.all(leaf == 0))
+
+    def test_graft_rejects_oversize(self):
+        from repro.serving.cache import grow_cache
+
+        cfg, _ = self._pool()
+        b = {"tokens": jnp.zeros((1, 24), jnp.int32)}
+        params = api.init(cfg, jax.random.key(7))
+        _, states, _ = api.prefill(cfg, params, b)
+        with pytest.raises(ValueError):
+            grow_cache(cfg, states, 1, 16, jnp.float32)  # 24 > 16
+
+
+class TestSampler:
+    def _logits(self, b=4, v=64, seed=0):
+        return jnp.asarray(np.random.RandomState(seed).randn(b, v)
+                           .astype(np.float32))
+
+    def test_greedy_matches_argmax(self):
+        lg = self._logits()
+        for policy in (EXACT, GS_FEEDBACK):
+            got = sample_tokens(lg, policy=policy)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.argmax(np.asarray(lg), axis=-1))
+
+    def test_top_k_restricts_support(self):
+        lg = self._logits(b=8, v=32)
+        topk = 5
+        allowed = np.argsort(np.asarray(lg), axis=-1)[:, -topk:]
+        for trial in range(20):
+            got = np.asarray(sample_tokens(
+                lg, policy=GS_FEEDBACK, temperature=1.5, top_k=topk,
+                key=jax.random.key(trial)))
+            for row in range(lg.shape[0]):
+                assert got[row] in allowed[row]
+
+    def test_temperature_vector_mixes_greedy_and_sampled(self):
+        lg = self._logits(b=6, v=256, seed=3)
+        temps = jnp.asarray([0.0, 1.0, 0.0, 2.0, 0.0, 1.0], jnp.float32)
+        greedy = np.argmax(np.asarray(lg), axis=-1)
+        draws = [np.asarray(sample_tokens(lg, policy=GS_FEEDBACK,
+                                          temperature=temps,
+                                          key=jax.random.key(t)))
+                 for t in range(30)]
+        for d in draws:
+            np.testing.assert_array_equal(d[[0, 2, 4]], greedy[[0, 2, 4]])
+        # stochastic rows actually vary across keys
+        assert len({tuple(d[[1, 3, 5]].tolist()) for d in draws}) > 1
+
+    def test_sampled_distribution_tracks_probs(self):
+        """Inverse-CDF through the Goldschmidt softmax: a dominant logit
+        must dominate the draws."""
+        lg = jnp.asarray([[0.0, 4.0, 0.0, 0.0]], jnp.float32)
+        hits = sum(
+            int(np.asarray(sample_tokens(lg, policy=GS_FEEDBACK,
+                                         temperature=1.0,
+                                         key=jax.random.key(i)))[0] == 1)
+            for i in range(50))
+        assert hits >= 40  # p(top) ~ 0.95
+
+
+class TestVectorCurIndex:
+    """decode_attention/cache_update with a (b,) cur_index must equal
+    per-row scalar calls — the layer-level contract the engine rests on."""
+
+    def test_decode_attention_vector_matches_scalar(self):
+        from repro.layers import attention as attn
+
+        r = np.random.RandomState(9)
+        b, S, h, kh, hd = 3, 16, 4, 2, 8
+        q = jnp.asarray(r.randn(b, 1, h, hd).astype(np.float32))
+        k = jnp.asarray(r.randn(b, S, kh, hd).astype(np.float32))
+        v = jnp.asarray(r.randn(b, S, kh, hd).astype(np.float32))
+        cur = jnp.asarray([3, 9, 14], jnp.int32)
+        vec = attn.decode_attention(q, k, v, cur, policy=GS_FEEDBACK)
+        for i in range(b):
+            one = attn.decode_attention(
+                q[i:i + 1], k[i:i + 1], v[i:i + 1], jnp.int32(cur[i]),
+                policy=GS_FEEDBACK)
+            np.testing.assert_allclose(np.asarray(vec[i:i + 1]),
+                                       np.asarray(one), atol=1e-6)
+
+    def test_cache_update_vector_matches_scalar(self):
+        from repro.layers import attention as attn
+
+        r = np.random.RandomState(10)
+        b, S, kh, hd = 3, 12, 2, 4
+        kc = jnp.asarray(r.randn(b, S, kh, hd).astype(np.float32))
+        vc = jnp.asarray(r.randn(b, S, kh, hd).astype(np.float32))
+        kn = jnp.asarray(r.randn(b, 1, kh, hd).astype(np.float32))
+        vn = jnp.asarray(r.randn(b, 1, kh, hd).astype(np.float32))
+        cur = jnp.asarray([0, 5, 11], jnp.int32)
+        k2, v2 = attn.cache_update(kc, vc, kn, vn, cur)
+        for i in range(b):
+            k1, v1 = attn.cache_update(kc[i:i + 1], vc[i:i + 1],
+                                       kn[i:i + 1], vn[i:i + 1],
+                                       jnp.int32(cur[i]))
+            np.testing.assert_array_equal(np.asarray(k2[i:i + 1]),
+                                          np.asarray(k1))
+            np.testing.assert_array_equal(np.asarray(v2[i:i + 1]),
+                                          np.asarray(v1))
+
+
+class TestRequestValidation:
+    def test_bad_requests_rejected(self):
+        with pytest.raises(ValueError):
+            Request(rid=0, prompt=np.zeros(0, np.int32), max_new_tokens=2)
+        with pytest.raises(ValueError):
+            Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=0)
+
+    def test_overlong_request_rejected_at_run(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(8))
+        eng = Engine(cfg, params, EngineConfig(n_slots=1, s_max=16))
+        req = Request(rid=0, prompt=np.zeros(10, np.int32),
+                      max_new_tokens=10)
+        with pytest.raises(ValueError):
+            eng.run([req])
+
+    def test_duplicate_rids_rejected(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(8))
+        eng = Engine(cfg, params, EngineConfig(n_slots=1))
+        reqs = [Request(rid=7, prompt=np.zeros(4, np.int32),
+                        max_new_tokens=2) for _ in range(2)]
+        with pytest.raises(ValueError):
+            eng.run(reqs)
+
+    def test_encdec_requires_frames(self):
+        cfg = configs.get_smoke("whisper-large-v3", **F32)
+        params = api.init(cfg, jax.random.key(9))
+        eng = Engine(cfg, params, EngineConfig(n_slots=1))
+        with pytest.raises(ValueError):
+            eng.run([Request(rid=0, prompt=np.zeros(4, np.int32),
+                             max_new_tokens=2)])
