@@ -6,6 +6,11 @@ continuous-batching scheduler, once with the static lockstep baseline —
 and verifies the continuous outputs token-for-token against sequential
 single-request runs.  Writes ``BENCH_serve.json``:
 
+* ``n_devices`` / ``mesh`` — the device dimension: how many devices the
+  engines ran over and the (data, model) mesh shape (``mesh=None`` and
+  ``n_devices=1`` for the single-device engine CI exercises on every
+  push; the sharded-serving tests assert the same parity at 8 forced
+  host devices)
 * ``trace``       — per-request (rid, prompt_len, max_new_tokens,
                     arrival_time)
 * ``continuous`` / ``static`` — full :class:`ServeMetrics` dicts
@@ -68,7 +73,12 @@ def build_trace(cfg, n_requests: int, prompt_hi: int, gen_hi: int,
 
 
 def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
-                  json_path: Optional[str] = None, seed: int = 0) -> dict:
+                  json_path: Optional[str] = None, seed: int = 0,
+                  mesh_spec: Optional[str] = None) -> dict:
+    """``mesh_spec`` (e.g. "2x4", launch/mesh.py grammar) serves the trace
+    through the tensor-parallel engine instead; the record then carries
+    ``n_devices`` > 1 and the parity gate compares the sharded outputs
+    against the same single-device sequential references."""
     from repro import configs
     from repro.models import api
     from repro.serving import Engine, EngineConfig, generate_sequential
@@ -82,12 +92,19 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
         cfg = configs.get_config(arch, **over)
         n_slots, n_requests, prompt_hi, gen_hi = 8, 16, 64, 32
 
+    mesh = None
+    if mesh_spec is not None:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(mesh_spec)
+
     rng = np.random.RandomState(seed)
     params = api.init(cfg, jax.random.key(seed))
     engine = Engine(cfg, params,
                     EngineConfig(n_slots=n_slots,
                                  s_max=min(cfg.max_seq,
-                                           prompt_hi + gen_hi)))
+                                           prompt_hi + gen_hi)),
+                    mesh=mesh)
     # stagger arrivals within the first few prefills' service time so a
     # queue actually forms (the regime continuous batching targets); much
     # slower arrivals drain the pool and both schedulers degenerate to
@@ -126,6 +143,8 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
     rec = {
         "smoke": smoke,
         "arch": cfg.name,
+        "n_devices": int(mesh.devices.size) if mesh is not None else 1,
+        "mesh": dict(mesh.shape) if mesh is not None else None,
         "n_slots": n_slots,
         "n_requests": n_requests,
         "trace": [dict(rid=r.rid, prompt_len=r.prompt_len,

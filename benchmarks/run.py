@@ -60,7 +60,14 @@ def main() -> None:
                     help="run the continuous-vs-static serving benchmark "
                          f"only, write {DEFAULT_SERVE_JSON}; with --check, "
                          "fail on parity/occupancy regressions")
+    ap.add_argument("--serve-mesh", default=None, metavar="SPEC",
+                    help="run the --serve trace through the tensor-"
+                         "parallel engine on this (data, model) mesh "
+                         "(e.g. 2x4; the BENCH_serve.json n_devices "
+                         "dimension)")
     args = ap.parse_args()
+    if args.serve_mesh and not args.serve:
+        ap.error("--serve-mesh requires --serve")
 
     print("name,us_per_call,derived")
     if args.serve:
@@ -70,11 +77,13 @@ def main() -> None:
         # not a CI/CPU one (run bench_serve.serve_records(smoke=False)
         # directly for it)
         rec = bench_serve.serve_records(
-            smoke=True, json_path=args.json or DEFAULT_SERVE_JSON)
+            smoke=True, json_path=args.json or DEFAULT_SERVE_JSON,
+            mesh_spec=args.serve_mesh)
         m_c, m_s = rec["continuous"], rec["static"]
         for sched, m in (("continuous", m_c), ("static", m_s)):
             print(f"serve_{sched},{m['decode_time_s'] * 1e6 / max(m['decode_ticks'], 1):.1f},"
-                  f"\"{m['decode_tokens']} tok / {m['decode_ticks']} ticks, "
+                  f"\"n_devices={rec['n_devices']} "
+                  f"{m['decode_tokens']} tok / {m['decode_ticks']} ticks, "
                   f"{m['aggregate_tok_per_s']:.1f} tok/s aggregate, "
                   f"occupancy {m['occupancy']:.2f}\"")
         print(f"serve_speedup,0,\"ticks x{rec['tick_speedup']:.2f} "

@@ -220,8 +220,10 @@ _F32_TINY = np.float32(2.0**-126)
 
 def _pow2(e: jnp.ndarray) -> jnp.ndarray:
     """2^e as f32 for int32 e ∈ [-126, 127] (normal range only)."""
+    # np.int32 shift count: a bare python literal turns weakly-typed i64
+    # under enable_x64 and lax.shift_* does not promote operands
     return jax.lax.bitcast_convert_type(
-        jax.lax.shift_left(e + 127, 23), jnp.float32
+        jax.lax.shift_left(e + 127, np.int32(23)), jnp.float32
     )
 
 
@@ -237,7 +239,7 @@ def _normalize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     sub = x < _F32_TINY
     scaled = jnp.where(sub, x * _SUBNORM_SCALE, x)
     bits = jax.lax.bitcast_convert_type(scaled, jnp.int32)
-    e = (jax.lax.shift_right_logical(bits, 23) & F32_EXP_MASK) - 127
+    e = (jax.lax.shift_right_logical(bits, np.int32(23)) & F32_EXP_MASK) - 127
     m = jax.lax.bitcast_convert_type(
         (bits & F32_MANT_MASK) | F32_ONE_BITS, jnp.float32
     )
@@ -484,7 +486,9 @@ def _rsqrt_impl(x: jnp.ndarray, p: int, iters: int, variant: str
     e = jnp.where(odd, e - 1, e)
     k = gs_rsqrt_normalized(m, p=p, iters=iters, variant=variant)
     out = _scale_pow2(k, -(e // 2))
-    out = jnp.where(x32 == 0.0, jnp.inf, out)
+    # IEEE: rsqrt(±0) = ±inf (the -0 branch dodges the x<0 nan rule below
+    # because -0 < 0 is false)
+    out = jnp.where(x32 == 0.0, jnp.copysign(jnp.inf, x32), out)
     out = jnp.where(jnp.isinf(x32), 0.0, out)
     out = jnp.where((x32 < 0.0) | jnp.isnan(x32), jnp.nan, out)
     return out.astype(dtype)
@@ -545,7 +549,7 @@ def _sqrt_impl(x: jnp.ndarray, p: int, iters: int, variant: str
     else:
         g, h = jax.lax.fori_loop(0, iters, lambda _, gh: body(*gh), (g, h))
     out = _scale_pow2(g, e // 2)
-    out = jnp.where(x32 == 0.0, 0.0, out)
+    out = jnp.where(x32 == 0.0, x32, out)  # IEEE: sqrt(±0) = ±0
     out = jnp.where(jnp.isinf(x32), jnp.inf, out)
     out = jnp.where((x32 < 0.0) | jnp.isnan(x32), jnp.nan, out)
     return out.astype(dtype)

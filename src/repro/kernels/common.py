@@ -95,7 +95,9 @@ def split_fields(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]
     """IEEE-754 field peel: (sign_bits, biased_exp, mantissa_bits), all int32."""
     bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
     sign = bits & _F32_SIGN
-    e = jax.lax.shift_right_logical(bits, 23) & _F32_EXP_MASK
+    # np.int32 shift counts here and below: a bare python literal turns
+    # weakly-typed i64 under enable_x64 and lax.shift_* does not promote
+    e = jax.lax.shift_right_logical(bits, np.int32(23)) & _F32_EXP_MASK
     mant = bits & _F32_MANT_MASK
     return sign, e, mant
 
@@ -113,7 +115,7 @@ def pow2_from_biased(e_biased: jnp.ndarray) -> jnp.ndarray:
     """
     e = jnp.clip(e_biased, 0, 254)
     return jax.lax.bitcast_convert_type(
-        jax.lax.shift_left(e.astype(jnp.int32), 23), jnp.float32
+        jax.lax.shift_left(e.astype(jnp.int32), np.int32(23)), jnp.float32
     )
 
 
@@ -133,7 +135,7 @@ def gs_recip_core(
     ("feedback" — the loop carry is the feedback wire, the trip count the
     logic-block counter).
     """
-    idx = jax.lax.shift_right_logical(mant, 23 - p)
+    idx = jax.lax.shift_right_logical(mant, np.int32(23 - p))
     k1 = rom_gather(idx, table, p)
     q = k1  # MULT 1 with N = 1
     r = m * k1  # MULT 2

@@ -8,6 +8,12 @@
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --smoke --trace 12 --rate 40 --batch 4
 
+  # Tensor-parallel over 8 (here: forced host) devices, 2-way data x
+  # 4-way model:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --smoke --batch 4 --mesh 2x4
+
 Requests are prefilled individually (one lowering per distinct prompt
 length), grafted into a slot-pooled KV/SSM cache, and decoded by one
 fused jitted tick over the whole pool with per-slot sequence positions —
@@ -114,6 +120,11 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--scheduler", choices=("continuous", "static"),
                     default="continuous")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="serve sharded over a (data, model) device mesh: "
+                         "'DxM', 'data=D,model=M', a bare TP width 'M', "
+                         "or 'auto' (TP over every device); default: "
+                         "single-device engine")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the pre-compile pass; reported TTFT then "
                          "includes one-time jit compilation")
@@ -147,10 +158,19 @@ def main() -> None:
                   f"({src}, {res.us_per_call:.0f} us/call)")
         print(f"tuning cache: {tuning.cache_path()}")
 
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.mesh)
+        print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} "
+              f"{mesh.devices.flat[0].platform} devices")
+
     rng = np.random.RandomState(args.seed)
     params = api.init(cfg, jax.random.key(args.seed))
     engine = Engine(cfg, params, EngineConfig(
-        n_slots=args.batch, s_max=s_max, top_k=args.top_k, seed=args.seed))
+        n_slots=args.batch, s_max=s_max, top_k=args.top_k, seed=args.seed),
+        mesh=mesh)
     reqs = build_requests(args, cfg, rng)
     if not args.no_warmup:
         # compile prefill (per distinct length) + the tick up front so the

@@ -305,10 +305,18 @@ def decode_attention(
     g = h // kh
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(hd)
-    qg = q.reshape(b, kh, g, hd)
+    # move q from the projection's head sharding onto the cache layout
+    # (head_dim over 'model') before the contraction — resharding the
+    # (b, 1, h, hd) query is one tiny collective; letting GSPMD align the
+    # batch-dim kh instead reshards the whole KV cache every tick
+    qg = constrain(q.reshape(b, kh, g, hd), "dp", None, None, "model")
     logits = jnp.einsum(
         "bkgd,btkd->bkgt", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
     ) * sm_scale  # (b, kh, g, S)
+    # contraction over the 'model'-sharded head_dim: pin the result
+    # replicated over 'model' so GSPMD lowers the intended small psum
+    # instead of resharding the (much larger) KV cache around the einsum
+    logits = constrain(logits, "dp", None, None, None)
     pos = jnp.arange(S)[None, None, None, :]
     cur = jnp.asarray(cur_index)
     if cur.ndim == 1:  # per-slot sequence lengths (continuous batching)
@@ -316,6 +324,7 @@ def decode_attention(
     logits = jnp.where(pos <= cur, logits, NEG_INF)
     probs = policy.softmax(logits, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache.astype(jnp.float32))
+    o = constrain(o, "dp", None, None, "model")  # back on the cache layout
     return o.reshape(b, 1, h, hd).astype(q.dtype)
 
 

@@ -98,11 +98,22 @@ def block_apply(
         v = constrain(v, "dp", s_ax, None, None)
         if rope_cs is not None:
             cos, sin = rope_cs
-            q = apply_rope(q, cos, sin)
-            k = apply_rope(k, cos, sin)
+            # re-pin after rope: its rotate-half concatenate must never be
+            # partitioned along head_dim (XLA SPMD miscompiles a concat
+            # whose seam lands on a shard boundary — same bug class as
+            # encdec._sinusoid), and GSPMD would otherwise pick the
+            # decode cache's hd-sharded layout for it
+            q = constrain(apply_rope(q, cos, sin), "dp", s_ax, h_ax, None)
+            k = constrain(apply_rope(k, cos, sin), "dp", s_ax, None, None)
         if mode == "decode":
             assert state is not None and cur_index is not None
             kc, vc = attn.cache_update(state["k"], state["v"], k, v, cur_index)
+            # the vmap'd per-slot row write lowers to a scatter, and GSPMD
+            # drops the cache sharding across it — re-pin (slots over dp,
+            # head_dim over 'model', the decode-cache policy) so the
+            # sharded cache round-trips the tick without rematerialization
+            kc = constrain(kc, "dp", None, None, "model")
+            vc = constrain(vc, "dp", None, None, "model")
             o = attn.decode_attention(q, kc, vc, cur_index, policy=policy)
             new_state = {"k": kc, "v": vc}
         else:
@@ -123,6 +134,10 @@ def block_apply(
                 params["mamba"], h, state["conv"], state["ssm"],
                 d_inner=cfg.d_inner, d_state=cfg.ssm_state, dt_rank=cfg.dt_rank_,
             )
+            # same re-pin as the KV path: keep the SSM/conv states on the
+            # decode-cache placement (d_inner over 'model') tick to tick
+            conv_s = constrain(conv_s, "dp", None, "model")
+            ssm_s = constrain(ssm_s, "dp", "model", None)
             new_state = {"conv": conv_s, "ssm": ssm_s}
         elif mode == "prefill":
             out, (conv_s, ssm_s) = mb.mamba_apply(

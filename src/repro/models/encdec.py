@@ -16,6 +16,7 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.layers import attention as attn
@@ -27,11 +28,17 @@ Params = Dict[str, Any]
 
 
 def _sinusoid(n: int, d: int) -> jnp.ndarray:
-    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
-    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
-    inv = jnp.exp(-dim * (jnp.log(10000.0) / (d // 2 - 1)))
+    # Host-side NumPy on purpose: this is a static (n, d) compile-time
+    # constant, and leaving it as traced iota+concatenate lets GSPMD
+    # partition the concat — which XLA CPU SPMD miscompiles when a shard
+    # boundary lands exactly on the sin/cos seam (observed as wrong
+    # encoder halves under the TP serving mesh; see
+    # tests/test_multidevice.py sharded-serving family parity).
+    pos = np.arange(n, dtype=np.float32)[:, None]
+    dim = np.arange(d // 2, dtype=np.float32)[None, :]
+    inv = np.exp(-dim * (np.log(10000.0) / (d // 2 - 1)))
     ang = pos * inv
-    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1))
 
 
 def _enc_layer_init(rng, cfg: ArchConfig):

@@ -220,6 +220,19 @@ def cache_shardings(mesh: Mesh, cfg, cache_specs, global_batch: int) -> Any:
     return jax.tree_util.tree_map_with_path(one, cache_specs)
 
 
+def pool_shardings(mesh: Mesh, cfg, cache_specs, n_slots: int) -> Any:
+    """Serving slot-pool placement = the documented decode-cache policy.
+
+    Slots (the pool's batch axis) shard over 'data', KV head_dim and SSM
+    ``d_inner`` over 'model'; everything else replicates.  A pool narrower
+    than the 'data' axis falls back to replicated rows (filter_pspec), so
+    a TP-only serving mesh (1, M) is always legal.  Same rule table as
+    training decode — the whole point of wiring serving onto the mesh is
+    that there is exactly one placement policy for a decode cache.
+    """
+    return cache_shardings(mesh, cfg, cache_specs, n_slots)
+
+
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 

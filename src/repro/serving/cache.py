@@ -12,18 +12,25 @@ heuristic: a source leaf must match its destination rank with every axis
 axis of KV caches) land left-aligned; everything else (SSM/conv states,
 cross-attention caches at full length) is replaced whole.  This subsumes
 the old ``grow_cache`` ``dst.ndim >= 3`` special case.
+
+With a ``mesh`` the pool lives sharded by the decode-cache policy
+(slots over 'data', KV head_dim / SSM d_inner over 'model' —
+``runtime.sharding.pool_shardings``) and the row ops re-jit with those
+shardings pinned on both sides of the donated cache, so admission
+grafts are in-place sharded updates, never gathers.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, List
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import api
+from repro.runtime import sharding as shr
 
 
 def _graft_leaf(dst: jnp.ndarray, src: jnp.ndarray, origin) -> jnp.ndarray:
@@ -41,23 +48,46 @@ def _graft_leaf(dst: jnp.ndarray, src: jnp.ndarray, origin) -> jnp.ndarray:
 # Jitted + donated pool-row ops: the slot index is a traced operand, so
 # one compilation covers every slot, and donation lets XLA update the
 # resident pool in place instead of copying every leaf per admission.
+# A sharded pool re-jits them per pool with pinned out_shardings so a
+# graft can never silently reshard the resident cache (cache.py pools on
+# a mesh; see SlotCachePool).
 
-@partial(jax.jit, donate_argnums=(0,))
-def _write_row(cache, states, slot):
+def _write_row_impl(cache, states, slot):
     return jax.tree.map(
         lambda dst, src: _graft_leaf(
             dst, src, (0, slot) + (0,) * (dst.ndim - 2)),
         cache, states)
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _zero_row(cache, slot):
+def _zero_row_impl(cache, slot):
     def z(a):
         row = jnp.zeros(a.shape[:1] + (1,) + a.shape[2:], a.dtype)
         return jax.lax.dynamic_update_slice(
             a, row, (0, slot) + (0,) * (a.ndim - 2))
 
     return jax.tree.map(z, cache)
+
+
+_write_row = partial(jax.jit, donate_argnums=(0,))(_write_row_impl)
+_zero_row = partial(jax.jit, donate_argnums=(0,))(_zero_row_impl)
+
+# One jitted (write, zero) pair per distinct sharding tree, shared by
+# every pool built on it: a fresh jax.jit wrapper per pool would discard
+# its compilation cache and recompile the graft on every Engine.run.
+_SHARDED_ROW_FNS: dict = {}
+
+
+def _sharded_row_fns(shardings):
+    key = (jax.tree.structure(shardings), tuple(jax.tree.leaves(shardings)))
+    if key not in _SHARDED_ROW_FNS:
+        _SHARDED_ROW_FNS[key] = (
+            jax.jit(_write_row_impl, donate_argnums=(0,),
+                    in_shardings=(shardings, None, None),
+                    out_shardings=shardings),
+            jax.jit(_zero_row_impl, donate_argnums=(0,),
+                    in_shardings=(shardings, None),
+                    out_shardings=shardings))
+    return _SHARDED_ROW_FNS[key]
 
 
 def grow_cache(cfg: ArchConfig, states, batch: int, s_max: int, dtype):
@@ -85,14 +115,31 @@ class SlotCachePool:
     hygiene (tests, debugging).
     """
 
-    def __init__(self, cfg: ArchConfig, n_slots: int, s_max: int, dtype):
+    def __init__(self, cfg: ArchConfig, n_slots: int, s_max: int, dtype,
+                 mesh: Optional[Any] = None, shardings: Optional[Any] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         assert s_max <= cfg.max_seq, (s_max, cfg.max_seq)
         self.cfg = cfg
         self.n_slots = n_slots
         self.s_max = s_max
+        self.mesh = mesh
         self.cache = api.make_cache(cfg, n_slots, s_max, dtype)
+        if mesh is None:
+            self.shardings = None
+            self._write, self._zero = _write_row, _zero_row
+        else:
+            # Pool rows live sharded on the mesh (slots over 'data',
+            # head_dim / d_inner over 'model'); the row ops are jitted
+            # with the pool's shardings pinned on BOTH sides so an
+            # admission graft is an in-place sharded update, never a
+            # gather.  Callers that precomputed the tree (the engine)
+            # pass it in; the jitted pair is shared per sharding tree.
+            self.shardings = shardings if shardings is not None else \
+                shr.pool_shardings(
+                    mesh, cfg, jax.eval_shape(lambda: self.cache), n_slots)
+            self.cache = jax.device_put(self.cache, self.shardings)
+            self._write, self._zero = _sharded_row_fns(self.shardings)
         self._free: List[int] = list(range(n_slots))
 
     @property
@@ -117,11 +164,11 @@ class SlotCachePool:
         self._free.sort()
 
     def reset(self, slot: int) -> None:
-        self.cache = _zero_row(self.cache, jnp.int32(slot))
+        self.cache = self._zero(self.cache, jnp.int32(slot))
 
     def write(self, slot: int, states: Any) -> None:
         """Graft a batch-1 prefill state pytree into the slot's row."""
-        self.cache = _write_row(self.cache, states, jnp.int32(slot))
+        self.cache = self._write(self.cache, states, jnp.int32(slot))
 
     def row(self, slot: int) -> Any:
         """The slot's cache row (leading axes kept), for tests/debugging."""

@@ -25,6 +25,31 @@ makes the same throughput argument at the FPGA level).  The loop:
 (admit a full group, no admission until the whole group finishes) — the
 baseline ``BENCH_serve.json`` compares against.
 
+Scheduler-invariant sampling
+----------------------------
+The PRNG stream for token ``t`` of request ``r`` is
+``fold_in(fold_in(key(seed), r), prompt_len + t)`` — a pure function of
+(engine seed, request id, absolute sequence position).  Slot assignment,
+pool width, admission order and the continuous/static scheduler choice
+therefore cannot change a stochastic request's tokens: the same trace
+under ``n_slots=1`` and ``n_slots=8``, continuous or static, yields
+identical streams (tests/test_serving.py::TestSchedulerDeterminism).
+Per-row keys are folded *inside* the fused tick from the (rid, cur)
+vectors, so the scheme costs no extra host transfers.
+
+Tensor-parallel serving
+-----------------------
+Pass ``mesh`` (axes ``("data", "model")``, launch/mesh.py) and the
+engine runs the whole stack sharded: params are placed by the training
+rule table (runtime/sharding.py), the slot pool by the decode-cache
+policy (slots over 'data', KV head_dim and SSM d_inner over 'model'),
+and the fused tick is jitted with matching in/out shardings so the
+donated cache round-trips with **no resharding** — per-slot decode, the
+Goldschmidt softmax sampler and admission grafts all stay on-device
+across the mesh; only the (n_slots,) token ids cross to the host, as on
+one device.  Greedy fp32 output is token-for-token identical to the
+unsharded engine (tests/test_multidevice.py).
+
 Caveat: MoE capacity grouping couples batch rows (tokens from different
 slots compete for expert capacity), so engine outputs for MoE archs can
 diverge from sequential runs when groups fill up — raise
@@ -37,14 +62,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import api
+from repro.runtime import sharding as shr
 from repro.serving.cache import SlotCachePool
 from repro.serving.requests import (FINISHED, QUEUED, RUNNING, Request,
                                     RequestOutput, RequestState)
@@ -123,21 +152,41 @@ class ServeMetrics:
 
 
 class Engine:
-    """Continuous-batching engine over one model + one slot pool."""
+    """Continuous-batching engine over one model + one slot pool.
+
+    ``mesh`` (optional) runs the whole stack tensor/data-parallel over a
+    ``("data", "model")`` device mesh — see the module docstring.
+    """
 
     def __init__(self, cfg: ArchConfig, params,
-                 engine_cfg: Optional[EngineConfig] = None):
+                 engine_cfg: Optional[EngineConfig] = None, *,
+                 mesh: Optional[Mesh] = None):
         self.cfg = cfg
-        self.params = params
         self.ecfg = engine_cfg or EngineConfig()
         self.s_max = self.ecfg.s_max or cfg.max_seq
+        self.mesh = mesh
         self._policy = cfg.policy()
-        self._prefill = jax.jit(make_prefill_step(cfg))
-        self._decode = make_decode_step(cfg)
+        if mesh is None:
+            self.params = params
+            self._dp = ()
+            self._param_sh = self._cache_sh = None
+        else:
+            # Params by the training rule table; the pool by the decode-
+            # cache policy.  Prefill is batch-1 (no dp axis to use), the
+            # tick batches over the pool, so only the tick gets dp axes.
+            self._dp = shr.dp_axes(mesh, self.ecfg.n_slots)
+            self._param_sh = shr.tree_shardings(
+                mesh, jax.eval_shape(lambda: params))
+            self.params = jax.device_put(params, self._param_sh)
+            cache_specs = jax.eval_shape(lambda: api.make_cache(
+                cfg, self.ecfg.n_slots, self.s_max, jnp.dtype(cfg.dtype)))
+            self._cache_sh = shr.pool_shardings(
+                mesh, cfg, cache_specs, self.ecfg.n_slots)
+        self._prefill = jax.jit(make_prefill_step(cfg, mesh=mesh, dp=()))
+        self._decode = make_decode_step(cfg, mesh=mesh, dp=self._dp)
         self._tick_fns: Dict[bool, object] = {}
         self._first_fns: Dict[bool, object] = {}
         self._key = jax.random.key(self.ecfg.seed)
-        self._tick_count = 0
 
     # -- fused jitted steps --------------------------------------------------
 
@@ -146,20 +195,36 @@ class Engine:
             cfg, policy, top_k = self.cfg, self._policy, self.ecfg.top_k
             decode = self._decode
 
-            def tick(params, cache, cur_index, tokens, temps, key):
+            def tick(params, cache, cur_index, tokens, temps, rids, key):
                 step = {"token": tokens}
                 if cfg.pos == "mrope":
                     # text-style positions: the three streams coincide
                     step["pos_ids"] = jnp.broadcast_to(
                         cur_index[None, :, None], (3, tokens.shape[0], 1))
                 logits, cache = decode(params, cache, cur_index, step)
+                if stochastic:
+                    # per-row streams keyed on (request, position): the
+                    # token being sampled sits at absolute position
+                    # cur_index + 1 (see "Scheduler-invariant sampling")
+                    keys = jax.vmap(lambda r, c: jax.random.fold_in(
+                        jax.random.fold_in(key, r), c + 1))(rids, cur_index)
+                else:
+                    keys = None
                 nxt = sample_tokens(
                     logits[:, -1, :], policy=policy,
                     temperature=temps if stochastic else 0.0, top_k=top_k,
-                    key=key if stochastic else None)
+                    key=keys)
                 return nxt, cache
 
-            self._tick_fns[stochastic] = jax.jit(tick, donate_argnums=(1,))
+            jit_kw = {}
+            if self.mesh is not None:
+                jit_kw = dict(
+                    in_shardings=(self._param_sh, self._cache_sh,
+                                  None, None, None, None, None),
+                    out_shardings=(NamedSharding(self.mesh, P()),
+                                   self._cache_sh))
+            self._tick_fns[stochastic] = jax.jit(
+                tick, donate_argnums=(1,), **jit_kw)
         return self._tick_fns[stochastic]
 
     def _first_fn(self, stochastic: bool):
@@ -175,9 +240,11 @@ class Engine:
             self._first_fns[stochastic] = jax.jit(first)
         return self._first_fns[stochastic]
 
-    def _next_key(self):
-        self._tick_count += 1
-        return jax.random.fold_in(self._key, self._tick_count)
+    def _request_key(self, rid: int, pos: int):
+        """Key for the token at absolute position ``pos`` of request
+        ``rid`` — the host-side twin of the tick's in-jit fold."""
+        return jax.random.fold_in(
+            jax.random.fold_in(self._key, jnp.int32(rid)), jnp.int32(pos))
 
     # -- request plumbing ----------------------------------------------------
 
@@ -198,7 +265,8 @@ class Engine:
                                           prefill_batch(self.cfg, req))
         first = self._first_fn(stochastic)(
             logits, jnp.float32(req.temperature),
-            self._next_key() if stochastic else self._key)
+            self._request_key(req.rid, req.prompt_len) if stochastic
+            else self._key)
         token = int(jax.block_until_ready(first)[0])
         st.slot = pool.alloc()
         pool.write(st.slot, states)
@@ -232,15 +300,16 @@ class Engine:
         """
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler must be one of {SCHEDULERS}")
-        rids = [r.rid for r in requests]
-        if len(set(rids)) != len(rids):
+        all_rids = [r.rid for r in requests]
+        if len(set(all_rids)) != len(all_rids):
             raise ValueError("duplicate request rids: outputs are keyed "
                              "by rid")
         for req in requests:
             self._validate(req)
         n = self.ecfg.n_slots
         pool = SlotCachePool(self.cfg, n, self.s_max,
-                             jnp.dtype(self.cfg.dtype))
+                             jnp.dtype(self.cfg.dtype), mesh=self.mesh,
+                             shardings=self._cache_sh)
         metrics = ServeMetrics(n_requests=len(requests), n_slots=n)
         t_start = time.perf_counter()
         clock = lambda: time.perf_counter() - t_start  # noqa: E731
@@ -248,19 +317,22 @@ class Engine:
         states: List[RequestState] = [
             RequestState(r, t_arrive=r.arrival_time)
             for r in sorted(requests, key=lambda r: (r.arrival_time, r.rid))]
-        pending: List[RequestState] = list(states)
-        ready: List[RequestState] = []
+        # deques: the admission loop pops from the head every tick, and a
+        # list.pop(0) there is O(n) — quadratic over a long Poisson trace
+        pending: Deque[RequestState] = deque(states)
+        ready: Deque[RequestState] = deque()
         active: Dict[int, RequestState] = {}  # slot -> state
 
         # host-side mirrors of the per-slot device vectors
         cur = np.zeros(n, np.int32)
         last_tok = np.zeros(n, np.int32)
         temps = np.zeros(n, np.float32)
+        rids = np.zeros(n, np.int32)
 
         def admit_arrivals():
             now = clock()
             while pending and pending[0].t_arrive <= now:
-                st = pending.pop(0)
+                st = pending.popleft()
                 st.status = QUEUED
                 ready.append(st)
 
@@ -273,18 +345,19 @@ class Engine:
             cur[st.slot] = st.cur_index
             last_tok[st.slot] = st.tokens[-1]
             temps[st.slot] = st.request.temperature
+            rids[st.slot] = st.request.rid
 
         while pending or ready or active:
             admit_arrivals()
             if scheduler == "continuous":
                 budget = self.ecfg.max_prefill_per_tick
                 while ready and pool.free_slots and budget > 0:
-                    start(ready.pop(0))
+                    start(ready.popleft())
                     budget -= 1
             else:  # static lockstep: full group in, nothing until group out
                 if not active and ready:
                     while ready and pool.free_slots:
-                        start(ready.pop(0))
+                        start(ready.popleft())
 
             if not active:
                 if pending:  # idle until the next arrival
@@ -297,7 +370,7 @@ class Engine:
             nxt, pool.cache = self._tick_fn(stochastic)(
                 self.params, pool.cache, jnp.asarray(cur),
                 jnp.asarray(last_tok[:, None]), jnp.asarray(temps),
-                self._next_key() if stochastic else self._key)
+                jnp.asarray(rids), self._key)
             nxt = np.asarray(jax.block_until_ready(nxt))
             metrics.decode_time_s += time.perf_counter() - t0
             metrics.decode_ticks += 1
@@ -351,16 +424,17 @@ _SEQ_FNS: Dict[ArchConfig, tuple] = {}  # jit cache across reference calls
 
 def generate_sequential(cfg: ArchConfig, params, request: Request, *,
                         top_k: int = 0,
-                        s_max: Optional[int] = None) -> np.ndarray:
-    """Single-request greedy reference: prefill + batch-1 decode loop.
+                        s_max: Optional[int] = None,
+                        seed: int = 0) -> np.ndarray:
+    """Single-request reference: prefill + batch-1 decode loop.
 
-    Uses the same model entry points and the same sampler as the engine,
-    so an engine-vs-sequential mismatch isolates the serving machinery
-    (slot pool, per-slot cur_index, recycling) rather than sampler or
-    kernel noise.  Stochastic requests are out of scope — PRNG streams
-    depend on tick composition.
+    Uses the same model entry points, the same sampler and — for
+    stochastic requests — the same (rid, position)-keyed PRNG streams as
+    the engine (``seed`` must match ``EngineConfig.seed``), so an
+    engine-vs-sequential mismatch isolates the serving machinery (slot
+    pool, per-slot cur_index, recycling, tick composition) rather than
+    sampler or kernel noise.
     """
-    assert request.temperature == 0.0, "reference is greedy-only"
     policy = cfg.policy()
     s_max = s_max or cfg.max_seq
     if cfg not in _SEQ_FNS:
@@ -368,11 +442,22 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
                          jax.jit(make_decode_step(cfg), donate_argnums=(1,)))
     prefill, decode = _SEQ_FNS[cfg]
 
+    temp = float(request.temperature)
+    base = jax.random.key(seed)
+
+    def tok_key(pos: int):
+        if temp == 0.0:
+            return None
+        return jax.random.fold_in(
+            jax.random.fold_in(base, jnp.int32(request.rid)), jnp.int32(pos))
+
     logits, states, _ = prefill(params, prefill_batch(cfg, request))
     from repro.serving.cache import grow_cache
 
     cache = grow_cache(cfg, states, 1, s_max, jnp.dtype(cfg.dtype))
-    out = [int(sample_tokens(logits[:, -1, :], policy=policy, top_k=top_k)[0])]
+    out = [int(sample_tokens(logits[:, -1, :], policy=policy, top_k=top_k,
+                             temperature=temp,
+                             key=tok_key(request.prompt_len))[0])]
     for i in range(request.max_new_tokens - 1):
         cur = jnp.int32(request.prompt_len + i)
         step = {"token": jnp.asarray([[out[-1]]], jnp.int32)}
@@ -380,6 +465,7 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
             step["pos_ids"] = jnp.full((3, 1, 1), request.prompt_len + i,
                                        jnp.int32)
         lg, cache = decode(params, cache, cur, step)
-        out.append(int(sample_tokens(lg[:, -1, :], policy=policy,
-                                     top_k=top_k)[0]))
+        out.append(int(sample_tokens(
+            lg[:, -1, :], policy=policy, top_k=top_k, temperature=temp,
+            key=tok_key(request.prompt_len + i + 1))[0]))
     return np.asarray(out, np.int32)

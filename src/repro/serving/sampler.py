@@ -12,6 +12,14 @@ reciprocal is a single positive factor, so the ordering is the logits'
 ordering); stochastic sampling inverts the CDF at a uniform draw.
 ``temperature`` may be a (b,) vector so greedy and sampling requests
 share one fused tick; ``top_k`` is static (it shapes the lowering).
+
+``key`` may be a single typed PRNG key (one draw broadcast over rows —
+the legacy tick-stream shape) or a **(b,) vector of typed keys**, one
+independent stream per row.  The engine uses the vector form with keys
+folded from ``(request id, sequence position)`` so the draw for token t
+of request r is a pure function of (seed, r, t) — invariant to slot
+assignment, scheduler interleaving and pool width (see engine.py
+"Scheduler-invariant sampling").
 """
 
 from __future__ import annotations
@@ -31,7 +39,8 @@ def sample_tokens(
     policy: NumericsPolicy,
     temperature=0.0,  # python float or (b,) array; 0 -> greedy per row
     top_k: int = 0,   # static: 0 = full vocab
-    key: Optional[jax.Array] = None,  # required when any row samples
+    key: Optional[jax.Array] = None,  # single key or (b,) per-row keys;
+    # required when any row samples
 ) -> jnp.ndarray:
     """Returns (b,) int32 token ids."""
     lf = logits.astype(jnp.float32)
@@ -50,8 +59,14 @@ def sample_tokens(
 
     # minval keeps u strictly positive: u == 0 would satisfy cdf >= u*total
     # at index 0 even when token 0 is top-k-masked (probability 0)
-    u = jax.random.uniform(key, (lf.shape[0], 1), jnp.float32,
-                           minval=jnp.finfo(jnp.float32).tiny)
+    tiny = jnp.finfo(jnp.float32).tiny
+    if (jnp.ndim(key) == 1
+            and jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key)):
+        u = jax.vmap(lambda k: jax.random.uniform(
+            k, (1,), jnp.float32, minval=tiny))(key)
+    else:
+        u = jax.random.uniform(key, (lf.shape[0], 1), jnp.float32,
+                               minval=tiny)
     cdf = jnp.cumsum(probs, axis=-1)
     drawn = jnp.argmax(cdf >= u * cdf[:, -1:], axis=-1).astype(jnp.int32)
     temp_rows = jnp.broadcast_to(jnp.atleast_1d(temp), (lf.shape[0],))

@@ -3,7 +3,9 @@
 The main test process keeps 1 device by design (see conftest); these
 tests spawn `python -c` with XLA_FLAGS to get an 8-device host, then
 assert sharded-vs-single-device numerical equivalence and collective
-behavior (incl. the int8 error-feedback gradient compression).
+behavior (incl. the int8 error-feedback gradient compression) — and,
+for the serving engine, tensor-parallel token parity plus the
+no-resharding contract on the fused decode tick.
 """
 
 import json
@@ -17,7 +19,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_py(code: str, devices: int = 8) -> dict:
+def run_py(code: str, devices: int = 8, forbid_stderr: tuple = ()) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
@@ -25,6 +27,9 @@ def run_py(code: str, devices: int = 8) -> dict:
                          capture_output=True, text=True, env=env,
                          timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]
+    for marker in forbid_stderr:
+        assert marker not in out.stderr, (
+            f"forbidden stderr marker {marker!r}:\n" + out.stderr[-4000:])
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
@@ -123,3 +128,146 @@ class TestShardedTraining:
                               "step": manifest["step"]}))
         """)
         assert res["equal"] and res["sharded"] and res["step"] == 3
+
+
+@pytest.mark.slow
+class TestShardedServing:
+    def test_sharded_serving_token_parity_and_no_resharding(self):
+        """The tensor-parallel engine on a (2, 4) mesh over 8 forced host
+        devices must be token-for-token identical to the single-device
+        engine (greedy fp32), and the compiled decode tick must carry the
+        pool's cache shardings through unchanged (no resharding at the
+        donation boundary; no involuntary remat inside — the partitioner
+        logs the latter to stderr, which run_py screens)."""
+        res = run_py("""
+            import json, jax, jax.numpy as jnp, numpy as np
+            from repro import configs
+            from repro.models import api
+            from repro.launch.mesh import make_serving_mesh
+            from repro.serving import Engine, EngineConfig, Request
+
+            cfg = configs.get_smoke("tinyllama-1.1b", dtype="float32",
+                                    param_dtype="float32")
+            params = api.init(cfg, jax.random.key(0))
+            rng = np.random.RandomState(0)
+            specs = [(6, 5, 0.0), (9, 8, 0.0), (4, 3, 0.02), (7, 6, 0.03),
+                     (5, 4, 0.04)]
+            reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, (s,)),
+                            max_new_tokens=g, arrival_time=t)
+                    for i, (s, g, t) in enumerate(specs)]
+
+            e1 = Engine(cfg, params, EngineConfig(n_slots=2))
+            o1, _ = e1.run(reqs)
+            mesh = make_serving_mesh("2x4")
+            e2 = Engine(cfg, params, EngineConfig(n_slots=2), mesh=mesh)
+            o2, m2 = e2.run(reqs)
+            parity = all(np.array_equal(o1[r.rid].tokens, o2[r.rid].tokens)
+                         for r in reqs)
+
+            # params + pool actually sharded (not silently replicated)
+            sharded_params = sum(
+                len(l.sharding.device_set) > 1
+                for l in jax.tree.leaves(e2.params))
+            pool_sh = e2._cache_sh
+            sharded_cache = sum(
+                s.spec != jax.sharding.PartitionSpec()
+                for s in jax.tree.leaves(pool_sh))
+
+            # no-resharding lowering check: compile the greedy tick with
+            # the pool shardings and compare cache in/out shardings
+            cache = jax.device_put(
+                api.make_cache(cfg, 2, e2.s_max, jnp.float32), pool_sh)
+            args = (e2.params, cache, jnp.zeros(2, jnp.int32),
+                    jnp.zeros((2, 1), jnp.int32), jnp.zeros(2, jnp.float32),
+                    jnp.zeros(2, jnp.int32), e2._key)
+            compiled = e2._tick_fn(False).lower(*args).compile()
+            n = len(jax.tree.leaves(cache))
+            flat_in = jax.tree.leaves(compiled.input_shardings[0])
+            in_cache = flat_in[len(jax.tree.leaves(e2.params)):][:n]
+            out_cache = jax.tree.leaves(compiled.output_shardings)[-n:]
+            leaves = jax.tree.leaves(cache)
+            no_reshard = all(
+                a.is_equivalent_to(b, l.ndim) and
+                a.is_equivalent_to(s, l.ndim)
+                for a, b, s, l in zip(in_cache, out_cache,
+                                      jax.tree.leaves(pool_sh), leaves))
+
+            print(json.dumps({
+                "parity": parity,
+                "ticks": m2.decode_ticks,
+                "sharded_params": sharded_params,
+                "sharded_cache": sharded_cache,
+                "no_reshard": no_reshard,
+            }))
+        """, forbid_stderr=("Involuntary full rematerialization",))
+        assert res["parity"], "sharded vs single-device token mismatch"
+        assert res["ticks"] > 0
+        assert res["sharded_params"] > 0
+        assert res["sharded_cache"] > 0
+        assert res["no_reshard"], "decode tick resharded the cache"
+
+    def test_sharded_serving_stochastic_streams_match(self):
+        """Temperature/top-k sampling through the sharded tick: the
+        (rid, position)-keyed streams must survive TP unchanged."""
+        res = run_py("""
+            import json, jax, numpy as np
+            from repro import configs
+            from repro.models import api
+            from repro.launch.mesh import make_serving_mesh
+            from repro.serving import Engine, EngineConfig, Request
+
+            cfg = configs.get_smoke("tinyllama-1.1b", dtype="float32",
+                                    param_dtype="float32")
+            params = api.init(cfg, jax.random.key(1))
+            rng = np.random.RandomState(1)
+            reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, (5+i,)),
+                            max_new_tokens=4, temperature=0.8)
+                    for i in range(3)]
+            e1 = Engine(cfg, params, EngineConfig(n_slots=2, top_k=8))
+            o1, _ = e1.run(reqs)
+            e2 = Engine(cfg, params, EngineConfig(n_slots=2, top_k=8),
+                        mesh=make_serving_mesh("2x4"))
+            o2, _ = e2.run(reqs)
+            same = all(np.array_equal(o1[r.rid].tokens, o2[r.rid].tokens)
+                       for r in reqs)
+            print(json.dumps({"same": same}))
+        """)
+        assert res["same"], "stochastic streams diverged under TP"
+
+    def test_sharded_serving_family_parity(self):
+        """SSM states (d_inner over 'model') and encdec cross-KV through
+        the sharded pool: the exotic cache layouts.  The encdec case is
+        the regression lock for the partitioned sin/cos-concat
+        miscompile _sinusoid works around (host-side constant)."""
+        res = run_py("""
+            import json, jax, numpy as np
+            from repro import configs
+            from repro.models import api
+            from repro.launch.mesh import make_serving_mesh
+            from repro.serving import Engine, EngineConfig, Request
+
+            out = {}
+            for arch in ("falcon-mamba-7b", "whisper-large-v3"):
+                cfg = configs.get_smoke(arch, dtype="float32",
+                                        param_dtype="float32")
+                params = api.init(cfg, jax.random.key(2))
+                rng = np.random.RandomState(2)
+                frames = ((lambda: rng.randn(cfg.enc_seq, cfg.d_model)
+                           .astype(np.float32) * 0.1)
+                          if cfg.family == "encdec" else (lambda: None))
+                reqs = [Request(rid=i,
+                                prompt=rng.randint(0, cfg.vocab, (4 + i,)),
+                                max_new_tokens=4, frames=frames())
+                        for i in range(3)]
+                e1 = Engine(cfg, params, EngineConfig(n_slots=2))
+                o1, _ = e1.run(reqs)
+                e2 = Engine(cfg, params, EngineConfig(n_slots=2),
+                            mesh=make_serving_mesh("2x4"))
+                o2, _ = e2.run(reqs)
+                out[arch] = all(
+                    np.array_equal(o1[r.rid].tokens, o2[r.rid].tokens)
+                    for r in reqs)
+            print(json.dumps(out))
+        """)
+        for arch, ok in res.items():
+            assert ok, f"sharded serving parity broke for {arch}"
