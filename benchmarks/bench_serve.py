@@ -27,9 +27,21 @@ single-request runs.  Writes ``BENCH_serve.json``:
   noise between the two runs and leaves the structural win (fewer
   ticks for the same useful tokens).  This is the stable form of the
   throughput claim on a noisy CPU runner.
-* ``checks``      — the CI gate: parity vs sequential, continuous ticks
-  not above static ticks (with slack), continuous occupancy not below
-  static (with slack)
+* ``paged`` — the same trace served through the paged engine
+  (``EngineConfig(pool="paged")``: block-table page arena, prefix
+  sharing on), with its ``pool`` stats dict (pages in use, prefix hits,
+  COW copies, cache bytes)
+* ``paged_bytes_ratio`` — paged arena bytes / slot pool bytes; the
+  arena is sized to the trace, not the worst case, so the gate asserts
+  ratio <= 0.5
+* ``prefix`` — a second paged leg: one shared prompt across 8 requests;
+  the gate asserts the prompt was prefilled exactly once (7 exact
+  prefix hits skip prefill entirely) and that every sharer's tokens
+  still match the unshared sequential reference
+* ``checks``      — the CI gate: parity vs sequential (slot AND paged),
+  continuous ticks not above static ticks (with slack), continuous
+  occupancy not below static (with slack), the paged byte budget, and
+  prefill-once prefix sharing
 
 Ticks are the robust comparison: every decode tick costs one full-pool
 step, so fewer ticks for the same useful tokens IS the throughput win;
@@ -81,16 +93,19 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
     against the same single-device sequential references."""
     from repro import configs
     from repro.models import api
-    from repro.serving import Engine, EngineConfig, generate_sequential
+    from repro.serving import (Engine, EngineConfig, Request,
+                               generate_sequential)
 
     # fp32 so the parity check is exact token-for-token (greedy)
     over = dict(dtype="float32", param_dtype="float32")
     if smoke:
         cfg = configs.get_smoke(arch, **over)
         n_slots, n_requests, prompt_hi, gen_hi = 3, 8, 12, 10
+        page_size, n_pages = 4, 8  # 32 paged tokens vs 3*22=66 slot rows
     else:
         cfg = configs.get_config(arch, **over)
         n_slots, n_requests, prompt_hi, gen_hi = 8, 16, 64, 32
+        page_size, n_pages = 16, 16  # 256 vs 8*96=768 token rows
 
     mesh = None
     if mesh_spec is not None:
@@ -116,12 +131,47 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
     static_outs, static_m = engine.run(reqs, scheduler="static")
     cont_outs, cont_m = engine.run(reqs, scheduler="continuous")
 
-    parity_ok = True
+    # the same trace through the paged engine: block-table arena sized
+    # BELOW the worst case (admission throttles on the page budget and
+    # may evict cold prefix entries — parity must survive both)
+    paged_engine = Engine(
+        cfg, params,
+        EngineConfig(n_slots=n_slots, s_max=engine.s_max, pool="paged",
+                     page_size=page_size, n_pages=n_pages),
+        mesh=mesh)
+    paged_engine.warmup(sorted({r.prompt_len for r in reqs}))
+    paged_outs, paged_m = paged_engine.run(reqs)
+
+    refs = {r.rid: generate_sequential(cfg, params, r, s_max=engine.s_max)
+            for r in reqs}
+    parity_ok, paged_parity_ok = True, True
     for r in reqs:
-        ref = generate_sequential(cfg, params, r, s_max=engine.s_max)
+        ref = refs[r.rid]
         if not (np.array_equal(ref, cont_outs[r.rid].tokens)
                 and np.array_equal(ref, static_outs[r.rid].tokens)):
             parity_ok = False
+        if not np.array_equal(ref, paged_outs[r.rid].tokens):
+            paged_parity_ok = False
+    paged_bytes_ratio = (paged_m.pool["cache_bytes"]
+                         / max(cont_m.pool["cache_bytes"], 1))
+
+    # prefix-sharing leg: one shared prompt, 8 requests — the prompt
+    # must prefill exactly once (7 exact hits replay cached logits and
+    # decode off shared pages) and every sharer must still match the
+    # unshared sequential reference token-for-token
+    shared_len = max(2, prompt_hi // 2)
+    shared_prompt = rng.randint(0, cfg.vocab, (shared_len,))
+    shared_frames = (rng.randn(cfg.enc_seq, cfg.d_model).astype(np.float32)
+                     * 0.1 if cfg.family == "encdec" else None)
+    shared_reqs = [Request(rid=1000 + i, prompt=shared_prompt,
+                           max_new_tokens=5, frames=shared_frames)
+                   for i in range(8)]
+    prefix_outs, prefix_m = paged_engine.run(shared_reqs)
+    prefix_ref = generate_sequential(cfg, params, shared_reqs[0],
+                                     s_max=engine.s_max)
+    prefix_parity_ok = all(
+        np.array_equal(prefix_ref, prefix_outs[r.rid].tokens)
+        for r in shared_reqs)
 
     # scheduler-independent costs, pooled across both runs (see docstring)
     pooled_tick_s = ((cont_m.decode_time_s + static_m.decode_time_s)
@@ -139,6 +189,12 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
                      <= static_m.decode_ticks * TICK_SLACK),
         "occupancy_ok": (cont_m.occupancy
                          >= static_m.occupancy - OCCUPANCY_SLACK),
+        "paged_parity_ok": paged_parity_ok,
+        "paged_bytes_ok": paged_bytes_ratio <= 0.5,
+        "prefix_parity_ok": prefix_parity_ok,
+        "prefix_prefill_once": (prefix_m.prefill_skips == 7
+                                and prefix_m.prefill_tokens == shared_len
+                                and prefix_m.prefix_hits >= 7),
     }
     rec = {
         "smoke": smoke,
@@ -152,6 +208,11 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
                        arrival_time=r.arrival_time) for r in reqs],
         "continuous": cont_m.to_dict(),
         "static": static_m.to_dict(),
+        "paged": paged_m.to_dict(),
+        "prefix": prefix_m.to_dict(),
+        "page_size": page_size,
+        "n_pages": n_pages,
+        "paged_bytes_ratio": paged_bytes_ratio,
         "tick_speedup": static_m.decode_ticks / max(cont_m.decode_ticks, 1),
         "tok_s_speedup": (cont_m.aggregate_tok_per_s
                           / max(static_m.aggregate_tok_per_s, 1e-9)),

@@ -90,6 +90,17 @@ def main() -> None:
               f"tok/s x{rec['tok_s_speedup']:.2f} "
               f"(normalized x{rec['tok_s_speedup_normalized']:.2f}) "
               f"checks={rec['checks']}\"")
+        pm, pool = rec["paged"], rec["paged"]["pool"]
+        print(f"serve_paged,{pm['decode_time_s'] * 1e6 / max(pm['decode_ticks'], 1):.1f},"
+              f"\"pages {pool['peak_pages_in_use']}/{pool['n_pages']} peak "
+              f"(page_size {pool['page_size']}), "
+              f"bytes x{rec['paged_bytes_ratio']:.3f} vs slot pool, "
+              f"cow {pool['cow_copies']}, evictions {pool['evictions']}\"")
+        px = rec["prefix"]
+        print(f"serve_prefix,0,\"shared prompt x8: "
+              f"{px['prefill_skips']} prefills skipped, "
+              f"{px['prefix_hit_tokens']} prompt tokens shared, "
+              f"prefill_tokens {px['prefill_tokens']}\"")
         print(f"# wrote {args.json or DEFAULT_SERVE_JSON}", file=sys.stderr)
         if args.check and not rec["ok"]:
             for name, ok in rec["checks"].items():

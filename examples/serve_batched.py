@@ -3,6 +3,7 @@ KV caches, Goldschmidt softmax/renorm on the hot path.
 
     PYTHONPATH=src python examples/serve_batched.py
     PYTHONPATH=src python examples/serve_batched.py --arch jamba-1.5-large-398b
+    PYTHONPATH=src python examples/serve_batched.py --pool paged
 """
 
 import argparse
@@ -19,10 +20,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--pool", choices=("slot", "paged"), default="slot",
+                    help="KV pool: dense slot rows or the block-table "
+                         "page arena with prefix sharing")
     args = ap.parse_args()
     cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
            "--smoke", "--batch", str(args.batch),
-           "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]
+           "--prompt-len", str(args.prompt_len), "--gen", str(args.gen),
+           "--pool", args.pool]
     src = os.path.join(REPO, "src")
     existing = os.environ.get("PYTHONPATH")
     env = {**os.environ,

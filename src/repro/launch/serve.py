@@ -14,13 +14,20 @@
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --smoke --batch 4 --mesh 2x4
 
+  # Paged KV cache: a shared page arena instead of per-slot max-length
+  # rows, with prefix sharing (identical prompts prefill once):
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --smoke --trace 12 --pool paged --page-size 8 --pages 24
+
 Requests are prefilled individually (one lowering per distinct prompt
-length), grafted into a slot-pooled KV/SSM cache, and decoded by one
-fused jitted tick over the whole pool with per-slot sequence positions —
-greedy or temperature/top-k sampling through the Goldschmidt softmax
-runs inside the jit.  ``--scheduler static`` degrades to the lockstep
-baseline for comparison; ``benchmarks/bench_serve.py`` automates that
-comparison into ``BENCH_serve.json``.
+length), grafted into the cache pool, and decoded by one fused jitted
+tick over the whole pool with per-slot sequence positions — greedy or
+temperature/top-k sampling through the Goldschmidt softmax runs inside
+the jit.  ``--pool paged`` swaps the per-slot rows for the block-table
+page arena (serving/cache.py) and prints its page/prefix stats;
+``--scheduler static`` degrades to the lockstep baseline for
+comparison; ``benchmarks/bench_serve.py`` automates the comparisons
+into ``BENCH_serve.json``.
 """
 
 from __future__ import annotations
@@ -32,7 +39,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import api
-from repro.serving import Engine, EngineConfig, Request
+from repro.serving import Engine, EngineConfig, Request, SamplingParams
 
 
 def build_requests(args, cfg, rng: np.random.RandomState):
@@ -45,13 +52,16 @@ def build_requests(args, cfg, rng: np.random.RandomState):
         raise SystemExit("--prompt-len and --gen must be >= 1")
     if args.trace and args.rate <= 0:
         raise SystemExit("--rate must be > 0 (requests/second)")
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k)
     if not args.trace:
+        # genuinely identical: one prompt (and one frame draw) shared by
+        # every request, so --pool paged demonstrates prefix sharing
+        prompt = rng.randint(0, cfg.vocab, (args.prompt_len,))
+        frame = frames() if frames else None
         return [
-            Request(rid=i,
-                    prompt=rng.randint(0, cfg.vocab, (args.prompt_len,)),
-                    max_new_tokens=args.gen,
-                    temperature=args.temperature,
-                    frames=frames() if frames else None)
+            Request(rid=i, prompt=prompt, max_new_tokens=args.gen,
+                    sampling=sampling, frames=frame)
             for i in range(args.batch)]
     # Poisson arrivals at --rate req/s; prompt/gen drawn uniformly from
     # [len/2, len] so slots churn at different times.
@@ -67,7 +77,7 @@ def build_requests(args, cfg, rng: np.random.RandomState):
                                  args.prompt_len + 1)),)),
             max_new_tokens=int(rng.randint(max(1, args.gen // 2),
                                            args.gen + 1)),
-            temperature=args.temperature,
+            sampling=sampling,
             arrival_time=t,
             frames=frames() if frames else None))
     return reqs
@@ -93,6 +103,15 @@ def report(outs, metrics, scheduler: str) -> None:
         print(f"  TTFT ms: min {ttfts[0] * 1e3:.1f} / "
               f"median {ttfts[len(ttfts) // 2] * 1e3:.1f} / "
               f"max {ttfts[-1] * 1e3:.1f}")
+    pool = metrics.pool
+    if pool.get("kind") == "paged":
+        print(f"  pages: {pool['peak_pages_in_use']}/{pool['n_pages']} peak "
+              f"in use (page_size {pool['page_size']}), "
+              f"prefix hits {pool['prefix_hits']} "
+              f"({pool['prefix_hit_tokens']} prompt tokens shared, "
+              f"{metrics.prefill_skips} prefills skipped), "
+              f"cow copies {pool['cow_copies']}, "
+              f"cache bytes {pool['cache_bytes']}")
     print("sample generations (token ids):")
     for rid in sorted(outs)[:4]:
         print(f"  req {rid}:", outs[rid].tokens[:24].tolist())
@@ -120,6 +139,15 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--scheduler", choices=("continuous", "static"),
                     default="continuous")
+    ap.add_argument("--pool", choices=("slot", "paged"), default="slot",
+                    help="decode-cache layout: per-slot max-length rows "
+                         "or the block-table page arena with prefix "
+                         "sharing")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--pool paged: tokens per arena page")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="--pool paged: arena pages (0 = worst case; "
+                         "size it down to actually save memory)")
     ap.add_argument("--mesh", default=None, metavar="SPEC",
                     help="serve sharded over a (data, model) device mesh: "
                          "'DxM', 'data=D,model=M', a bare TP width 'M', "
@@ -169,7 +197,8 @@ def main() -> None:
     rng = np.random.RandomState(args.seed)
     params = api.init(cfg, jax.random.key(args.seed))
     engine = Engine(cfg, params, EngineConfig(
-        n_slots=args.batch, s_max=s_max, top_k=args.top_k, seed=args.seed),
+        n_slots=args.batch, s_max=s_max, seed=args.seed, pool=args.pool,
+        page_size=args.page_size, n_pages=args.pages),
         mesh=mesh)
     reqs = build_requests(args, cfg, rng)
     if not args.no_warmup:

@@ -75,10 +75,15 @@ def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
 
 
 def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
-                     dp: Tuple[str, ...] = ()) -> Callable:
-    def decode_step(params, states, cur_index, batch):
+                     dp: Tuple[str, ...] = (),
+                     page_size: int = 0) -> Callable:
+    """``page_size > 0`` builds the paged-cache variant: the returned step
+    takes a ``page_table`` keyword and reads/writes KV through it."""
+    def decode_step(params, states, cur_index, batch, page_table=None):
         with shr.activation_context(mesh, dp):
-            return api.decode_step(cfg, params, states, cur_index, batch)
+            return api.decode_step(cfg, params, states, cur_index, batch,
+                                   page_table=page_table,
+                                   page_size=page_size)
 
     return decode_step
 

@@ -351,3 +351,47 @@ def cache_update(
         v_cache, v_new.astype(v_cache.dtype), cur_index, axis=1
     )
     return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode (block-table cache: a shared page arena instead of rows)
+# ---------------------------------------------------------------------------
+#
+# The paged pool (serving/cache.py) replaces per-slot max-length rows with
+# a (n_pages, page_size, KH, hd) arena; each slot owns a block-table row
+# of page ids.  Decode resolves the indirection inside the fused tick:
+# ``paged_cache_update`` scatters the new K/V at (page, offset) derived
+# from cur_index, ``gather_pages`` materializes the slot's dense view for
+# the unchanged ``decode_attention``.  Parity with the dense path is
+# exact: positions beyond cur_index gather recycled-page garbage, but the
+# ``pos <= cur`` mask sends them to NEG_INF and ``exp(NEG_INF - m)``
+# underflows to fp32 zero, so softmax sums (and the prob-weighted V
+# contraction, 0 * finite = 0) are bit-identical to the zero-padded
+# dense rows.  Page id 0 is the pool's trash page: freed slots keep
+# all-zero table rows and cur = 0, so their stale tick writes land there.
+
+
+def paged_cache_update(
+    k_arena: jnp.ndarray,  # (P, page_size, KH, hd)
+    v_arena: jnp.ndarray,
+    k_new: jnp.ndarray,    # (b, 1, KH, hd)
+    v_new: jnp.ndarray,
+    page_table: jnp.ndarray,  # (b, pages_per_slot) int32 page ids
+    cur_index: jnp.ndarray,   # (b,) write positions
+    page_size: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter the new K/V of every slot through its block table."""
+    cur = jnp.asarray(cur_index)
+    pid = jnp.take_along_axis(
+        page_table, (cur // page_size)[:, None], axis=1)[:, 0]  # (b,)
+    off = cur % page_size
+    return (k_arena.at[pid, off].set(k_new[:, 0].astype(k_arena.dtype)),
+            v_arena.at[pid, off].set(v_new[:, 0].astype(v_arena.dtype)))
+
+
+def gather_pages(arena: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(P, page_size, KH, hd) x (b, n) block table -> dense (b, n*ps, KH, hd)
+    per-slot view for ``decode_attention``."""
+    pages = jnp.take(arena, page_table, axis=0)  # (b, n, ps, KH, hd)
+    b, n, ps = pages.shape[:3]
+    return pages.reshape(b, n * ps, *pages.shape[3:])

@@ -42,13 +42,20 @@ def prefill(cfg: ArchConfig, params, batch):
     return transformer.prefill(cfg, params, batch["tokens"], batch.get("pos_ids"))
 
 
-def decode_step(cfg: ArchConfig, params, states, cur_index, batch):
+def decode_step(cfg: ArchConfig, params, states, cur_index, batch,
+                page_table=None, page_size: int = 0):
     """One decode step; ``cur_index`` is a scalar (lockstep) or a (b,)
-    per-slot position vector (the serving engine's continuous batching)."""
+    per-slot position vector (the serving engine's continuous batching).
+    ``page_table``/``page_size`` switch the KV leaves of ``states`` to
+    the paged-arena layout (serving/cache.py PagedCachePool)."""
     if is_encdec(cfg):
-        return encdec.decode_step(cfg, params, states, cur_index, batch["token"])
-    return transformer.decode_step(cfg, params, states, cur_index, batch["token"],
-                                   batch.get("pos_ids"))
+        return encdec.decode_step(cfg, params, states, cur_index,
+                                  batch["token"], page_table=page_table,
+                                  page_size=page_size)
+    return transformer.decode_step(cfg, params, states, cur_index,
+                                   batch["token"], batch.get("pos_ids"),
+                                   page_table=page_table,
+                                   page_size=page_size)
 
 
 def make_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):

@@ -79,6 +79,8 @@ def block_apply(
     rope_cs: Optional[Tuple[jnp.ndarray, jnp.ndarray]],  # cos/sin (b,s,hd/2)
     state: Optional[Dict[str, jnp.ndarray]] = None,
     cur_index: Optional[jnp.ndarray] = None,
+    page_table: Optional[jnp.ndarray] = None,  # (b, pages) paged decode
+    page_size: int = 0,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     mixer, ffn = kind
     policy = cfg.policy()
@@ -107,15 +109,39 @@ def block_apply(
             k = constrain(apply_rope(k, cos, sin), "dp", s_ax, None, None)
         if mode == "decode":
             assert state is not None and cur_index is not None
-            kc, vc = attn.cache_update(state["k"], state["v"], k, v, cur_index)
-            # the vmap'd per-slot row write lowers to a scatter, and GSPMD
-            # drops the cache sharding across it — re-pin (slots over dp,
-            # head_dim over 'model', the decode-cache policy) so the
-            # sharded cache round-trips the tick without rematerialization
-            kc = constrain(kc, "dp", None, None, "model")
-            vc = constrain(vc, "dp", None, None, "model")
-            o = attn.decode_attention(q, kc, vc, cur_index, policy=policy)
-            new_state = {"k": kc, "v": vc}
+            if page_table is not None:
+                # block-table path: KV leaves are the shared page arena
+                # (n_pages, page_size, KH, hd); scatter through the table,
+                # then gather the slot's dense view for the same
+                # decode_attention (bit-exact vs the row path — see
+                # attention.py "paged decode").  The constrain templates
+                # match the row path because the arena's page axis sits
+                # where the slot axis was (pool_shardings rules).
+                kc, vc = attn.paged_cache_update(
+                    state["k"], state["v"], k, v, page_table, cur_index,
+                    page_size)
+                kc = constrain(kc, "dp", None, None, "model")
+                vc = constrain(vc, "dp", None, None, "model")
+                kv = constrain(attn.gather_pages(kc, page_table),
+                               "dp", None, None, "model")
+                vv = constrain(attn.gather_pages(vc, page_table),
+                               "dp", None, None, "model")
+                o = attn.decode_attention(q, kv, vv, cur_index,
+                                          policy=policy)
+                new_state = {"k": kc, "v": vc}
+            else:
+                kc, vc = attn.cache_update(
+                    state["k"], state["v"], k, v, cur_index)
+                # the vmap'd per-slot row write lowers to a scatter, and
+                # GSPMD drops the cache sharding across it — re-pin (slots
+                # over dp, head_dim over 'model', the decode-cache policy)
+                # so the sharded cache round-trips the tick without
+                # rematerialization
+                kc = constrain(kc, "dp", None, None, "model")
+                vc = constrain(vc, "dp", None, None, "model")
+                o = attn.decode_attention(q, kc, vc, cur_index,
+                                          policy=policy)
+                new_state = {"k": kc, "v": vc}
         else:
             o = attn.flash(
                 q, k, v, policy=policy, causal=True,

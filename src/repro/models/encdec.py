@@ -106,7 +106,8 @@ def encode(cfg: ArchConfig, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
 
 
 def _dec_stack(cfg: ArchConfig, params: Params, x, enc_out, *, mode: str,
-               states=None, cur_index=None):
+               states=None, cur_index=None, page_table=None,
+               page_size: int = 0):
     policy = cfg.policy()
     has_state = mode in ("prefill", "decode")
 
@@ -116,8 +117,20 @@ def _dec_stack(cfg: ArchConfig, params: Params, x, enc_out, *, mode: str,
         q, k, v = attn.qkv(lp["self_attn"], h)
         new_st = {} if has_state else None
         if mode == "decode":
-            kc, vc = attn.cache_update(st["k"], st["v"], k, v, cur_index)
-            o = attn.decode_attention(q, kc, vc, cur_index, policy=policy)
+            if page_table is not None:
+                # paged self-attention KV (shared arena, see attention.py);
+                # cross-KV stays slot-indexed — it is request-specific
+                # (computed from this request's frames) and full-length
+                # from prefill, so paging buys nothing there.
+                kc, vc = attn.paged_cache_update(
+                    st["k"], st["v"], k, v, page_table, cur_index, page_size)
+                o = attn.decode_attention(
+                    q, attn.gather_pages(kc, page_table),
+                    attn.gather_pages(vc, page_table), cur_index,
+                    policy=policy)
+            else:
+                kc, vc = attn.cache_update(st["k"], st["v"], k, v, cur_index)
+                o = attn.decode_attention(q, kc, vc, cur_index, policy=policy)
             new_st = {"k": kc, "v": vc, "ck": st["ck"], "cv": st["cv"]}
             ck, cv = st["ck"], st["cv"]
         else:
@@ -197,10 +210,12 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
     return _unembed(cfg, params, x[:, -1:, :]), states, jnp.int32(tokens.shape[1])
 
 
-def decode_step(cfg: ArchConfig, params: Params, states, cur_index, token):
+def decode_step(cfg: ArchConfig, params: Params, states, cur_index, token,
+                page_table=None, page_size: int = 0):
     x = _embed_dec(cfg, params, token, cur_index=cur_index)
     x, new_states = _dec_stack(cfg, params, x, None, mode="decode",
-                               states=states, cur_index=cur_index)
+                               states=states, cur_index=cur_index,
+                               page_table=page_table, page_size=page_size)
     return _unembed(cfg, params, x), new_states
 
 

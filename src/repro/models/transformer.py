@@ -104,7 +104,8 @@ def unembed(cfg: ArchConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _stack(cfg: ArchConfig, params: Params, x: jnp.ndarray, *, mode: str,
-           rope_cs, states=None, cur_index=None):
+           rope_cs, states=None, cur_index=None, page_table=None,
+           page_size: int = 0):
     """Scan the layer stack.  Returns (x, new_states or None)."""
     kinds = cfg.block_kinds()
     has_state = mode in ("prefill", "decode")
@@ -117,7 +118,8 @@ def _stack(cfg: ArchConfig, params: Params, x: jnp.ndarray, *, mode: str,
                                         mode == "decode") else None
             x, ns = blocks.block_apply(
                 cfg, kind, gparams[f"pos{i}"], x, mode=mode, rope_cs=rope_cs,
-                state=st, cur_index=cur_index,
+                state=st, cur_index=cur_index, page_table=page_table,
+                page_size=page_size,
             )
             if has_state:
                 new_gstates[f"pos{i}"] = ns
@@ -200,17 +202,23 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
 
 
 def decode_step(cfg: ArchConfig, params: Params, states, cur_index: jnp.ndarray,
-                token: jnp.ndarray, pos_ids: Optional[jnp.ndarray] = None):
+                token: jnp.ndarray, pos_ids: Optional[jnp.ndarray] = None,
+                page_table: Optional[jnp.ndarray] = None,
+                page_size: int = 0):
     """One decode step: token (b, 1) -> (logits (b, 1, V), new states).
 
     ``cur_index`` is a scalar for lockstep batches or a (b,) vector of
-    per-slot sequence positions (the serving engine's slot pool).
+    per-slot sequence positions (the serving engine's slot pool).  With
+    ``page_table`` (b, pages_per_slot) the KV leaves of ``states`` are a
+    shared page arena and decode reads/writes through the block table
+    (serving/cache.py PagedCachePool); SSM/conv leaves stay slot-indexed.
     """
     b = token.shape[0]
     rope_cs = _rope_info(cfg, b, 1, pos_ids, cur_index=cur_index)
     x = embed_tokens(cfg, params, token,
                      cur_index=cur_index if cfg.pos == "learned" else None)
     x, new_states = _stack(cfg, params, x, mode="decode", rope_cs=rope_cs,
-                           states=states, cur_index=cur_index)
+                           states=states, cur_index=cur_index,
+                           page_table=page_table, page_size=page_size)
     logits = unembed(cfg, params, x)
     return logits, new_states

@@ -229,6 +229,14 @@ def pool_shardings(mesh: Mesh, cfg, cache_specs, n_slots: int) -> Any:
     a TP-only serving mesh (1, M) is always legal.  Same rule table as
     training decode — the whole point of wiring serving onto the mesh is
     that there is exactly one placement policy for a decode cache.
+
+    The PAGED pool's arenas reuse the same rule unchanged: a paged k/v
+    leaf is (lead, n_pages, page_size, KH, hd) — still rank 5, with the
+    page axis sitting where the slot axis sat — so the rank-5 k/v rule
+    ``P(None, dspec, None, None, 'model')`` shards pages over 'data' and
+    head_dim over 'model' with no paged-specific case here.  Non-paged
+    leaves (ck/cv cross-KV, conv, ssm) keep slot-resident shapes and hit
+    their usual rows.
     """
     return cache_shardings(mesh, cfg, cache_specs, n_slots)
 

@@ -1,13 +1,39 @@
-"""Continuous-batching serving: engine, slot-pooled cache, sampler.
+"""Continuous-batching serving: engine, cache pools, sampler.
 
 The serving echo of the paper's hardware reduction: one resident decode
 datapath (the jitted tick) kept busy by independent in-flight requests
-instead of a lockstep batch that forms and finishes together.
+instead of a lockstep batch that forms and finishes together — and, with
+the paged pool, one shared KV arena sized to the load instead of
+per-slot worst-case rows.
+
+Public surface (``__all__``): build an :class:`Engine` over an
+:class:`EngineConfig` (``pool="paged"`` for the block-table cache),
+submit :class:`Request` objects carrying :class:`SamplingParams`, and
+get a :class:`ServeResult` mapping rids to :class:`GenerationResult`.
+Cache pools implement the :class:`CachePool` protocol.
 """
 
-from repro.serving.cache import SlotCachePool, grow_cache  # noqa: F401
+from repro.serving.cache import (CachePool, PagedCachePool,  # noqa: F401
+                                 PrefixHit, SlotCachePool, grow_cache,
+                                 make_paged_cache)
 from repro.serving.engine import (Engine, EngineConfig,  # noqa: F401
-                                  ServeMetrics, generate_sequential)
-from repro.serving.requests import (Request, RequestOutput,  # noqa: F401
-                                    RequestState)
+                                  ServeMetrics, generate_sequential,
+                                  prefill_batch)
+from repro.serving.requests import (GenerationResult, Request,  # noqa: F401
+                                    RequestOutput, RequestState,
+                                    SamplingParams, ServeResult)
 from repro.serving.sampler import sample_tokens  # noqa: F401
+
+__all__ = [
+    # engine
+    "Engine", "EngineConfig", "ServeMetrics", "generate_sequential",
+    "prefill_batch",
+    # requests / results
+    "Request", "SamplingParams", "GenerationResult", "ServeResult",
+    "RequestState", "RequestOutput",  # RequestOutput: legacy alias
+    # cache pools
+    "CachePool", "SlotCachePool", "PagedCachePool", "PrefixHit",
+    "make_paged_cache",
+    # sampling
+    "sample_tokens",
+]

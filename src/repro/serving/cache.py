@@ -1,36 +1,89 @@
-"""Slot-pooled decode cache: per-slot allocate / write / reset / free.
+"""Decode-cache pools behind one :class:`CachePool` protocol.
 
-The pool is one resident cache pytree (``api.make_cache`` at the full
-slot count and max sequence length); every model family stacks its state
-leaves as ``(groups_or_layers, batch, ...)``, so **axis 1 is the slot
-axis** for every leaf — KV caches, SSM states and conv tails alike.
+Two implementations:
 
-Grafting a prefill-length state into a pool row is structural, not
-heuristic: a source leaf must match its destination rank with every axis
-``<=`` the destination's, and is written at the origin with one
-``dynamic_update_slice``.  Axes the prefill emitted short (the sequence
-axis of KV caches) land left-aligned; everything else (SSM/conv states,
-cross-attention caches at full length) is replaced whole.  This subsumes
-the old ``grow_cache`` ``dst.ndim >= 3`` special case.
+* :class:`SlotCachePool` — the legacy layout: one resident cache pytree
+  (``api.make_cache``) with **axis 1 the slot axis** of every leaf; each
+  slot owns a max-length row.  HBM scales with the worst-case sequence.
 
-With a ``mesh`` the pool lives sharded by the decode-cache policy
-(slots over 'data', KV head_dim / SSM d_inner over 'model' —
-``runtime.sharding.pool_shardings``) and the row ops re-jit with those
-shardings pinned on both sides of the donated cache, so admission
-grafts are in-place sharded updates, never gathers.
+* :class:`PagedCachePool` — the block-table layout (the paper's hardware
+  *reduction* applied to serving memory): KV leaves become a shared
+  **page arena** ``(lead, n_pages, page_size, KH, hd)`` sized to the
+  expected load, each slot owns a block-table row of page ids, and the
+  fused decode tick resolves the indirection in-graph
+  (``attention.paged_cache_update`` / ``gather_pages``).  Pages are
+  alloc'd/freed at page granularity with refcounts, and hash-keyed
+  **prefix sharing** lets N requests with the same prompt prefill it
+  once and decode off shared pages (copy-on-write at the partial
+  boundary page).  SSM conv/ssm states and encdec cross-KV stay
+  slot-indexed — they are O(1) per slot or request-specific.
+
+Page id 0 is the reserved **trash page**: a freed slot keeps an all-zero
+table row and ``cur_index = 0``, so the stale writes the fused tick
+still issues for inactive slots land in the trash page instead of
+corrupting a reallocated page.
+
+Prefix sharing modes (``share=``):
+
+* ``"exact"`` (default) — whole-prompt hits only: a request whose
+  (prompt, frames) hash matches a cached entry skips prefill entirely,
+  reusing the entry's pages, cached last-position logits and
+  slot-resident states.  Bit-exact for any mix of requests.
+* ``"pages"`` — additionally shares page-aligned *partial* prefixes via
+  chained page hashes (the vLLM scheme).  The sharer still runs its own
+  prefill (memory sharing, not compute sharing); shared pages are not
+  rewritten.  Bit-exact between same-length prompts; across different
+  lengths the chunked-prefill block partition can move KV values by
+  ULPs, so greedy streams may diverge from the unshared run.
+* ``"off"`` — no sharing.
+
+Sharing soundness: a page's positions beyond a reader's ``cur_index``
+are masked to NEG_INF and ``exp`` underflows them to exact fp32 zero,
+so pollution at offsets the reader hasn't reached is invisible; the
+only true conflict is two slots writing the same (page, offset), which
+the boundary-page copy-on-write removes.
+
+With a ``mesh`` both pools live sharded by the decode-cache policy
+(``runtime.sharding.pool_shardings`` — the page axis of an arena leaf
+sits exactly where the slot axis was, so the same rule table covers
+both layouts), and the admission ops re-jit with those shardings pinned
+on both sides of the donated cache: grafts, page writes and COW copies
+are in-place sharded updates, never gathers.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import warnings
+from collections import Counter, OrderedDict, deque
 from functools import partial
-from typing import Any, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import api
 from repro.runtime import sharding as shr
+
+try:  # pragma: no cover - import surface only
+    from typing import Protocol, runtime_checkable
+except ImportError:  # pragma: no cover
+    Protocol = object
+
+    def runtime_checkable(cls):
+        return cls
+
+
+TRASH_PAGE = 0  # reserved: inactive slots write here (never read unmasked)
+
+_PAGED_LEAVES = ("k", "v")  # leaf names that move into the page arena
+
+
+def _leaf_name(path) -> str:
+    return shr._path_names(path)[-1]
 
 
 def _graft_leaf(dst: jnp.ndarray, src: jnp.ndarray, origin) -> jnp.ndarray:
@@ -45,12 +98,11 @@ def _graft_leaf(dst: jnp.ndarray, src: jnp.ndarray, origin) -> jnp.ndarray:
     return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), origin)
 
 
-# Jitted + donated pool-row ops: the slot index is a traced operand, so
+# Jitted + donated pool ops: slot/page indices are traced operands, so
 # one compilation covers every slot, and donation lets XLA update the
 # resident pool in place instead of copying every leaf per admission.
-# A sharded pool re-jits them per pool with pinned out_shardings so a
-# graft can never silently reshard the resident cache (cache.py pools on
-# a mesh; see SlotCachePool).
+# Sharded pools re-jit them with pinned out_shardings so an admission
+# can never silently reshard the resident cache.
 
 def _write_row_impl(cache, states, slot):
     return jax.tree.map(
@@ -71,14 +123,18 @@ def _zero_row_impl(cache, slot):
 _write_row = partial(jax.jit, donate_argnums=(0,))(_write_row_impl)
 _zero_row = partial(jax.jit, donate_argnums=(0,))(_zero_row_impl)
 
-# One jitted (write, zero) pair per distinct sharding tree, shared by
-# every pool built on it: a fresh jax.jit wrapper per pool would discard
-# its compilation cache and recompile the graft on every Engine.run.
+# One jitted fn set per distinct sharding tree, shared by every pool
+# built on it: a fresh jax.jit wrapper per pool would discard its
+# compilation cache and recompile the graft on every Engine.run.
 _SHARDED_ROW_FNS: dict = {}
 
 
+def _sharding_key(shardings):
+    return (jax.tree.structure(shardings), tuple(jax.tree.leaves(shardings)))
+
+
 def _sharded_row_fns(shardings):
-    key = (jax.tree.structure(shardings), tuple(jax.tree.leaves(shardings)))
+    key = _sharding_key(shardings)
     if key not in _SHARDED_ROW_FNS:
         _SHARDED_ROW_FNS[key] = (
             jax.jit(_write_row_impl, donate_argnums=(0,),
@@ -90,12 +146,207 @@ def _sharded_row_fns(shardings):
     return _SHARDED_ROW_FNS[key]
 
 
-def grow_cache(cfg: ArchConfig, states, batch: int, s_max: int, dtype):
-    """Copy prefill-length caches into max-length decode allocations."""
-    full = api.make_cache(cfg, batch, s_max, dtype)
-    return jax.tree.map(
-        lambda dst, src: _graft_leaf(dst, src, (0,) * dst.ndim),
-        full, states)
+# -- paged ops ---------------------------------------------------------------
+
+
+def _paged_admit_impl(cache, states, pids, slot, *, page_size: int):
+    """Write one request's prefill into the pool.
+
+    Paged (k/v) leaves: the batch-1 prefill KV is zero-padded to whole
+    pages and scattered at ``pids`` (an id of TRASH_PAGE skips a page
+    that is shared and already holds identical content).  Every other
+    leaf (SSM conv/ssm, encdec cross-KV) grafts into the slot's row
+    exactly like the slot pool.  The exact-hit skip path reuses this
+    with zero-length paged leaves and an empty ``pids``.
+    """
+    def one(path, dst, src):
+        if _leaf_name(path) in _PAGED_LEAVES:
+            n = pids.shape[0]
+            buf = src[:, 0].astype(dst.dtype)  # (lead, s, KH, hd)
+            pad = n * page_size - buf.shape[1]
+            buf = jnp.pad(buf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            buf = buf.reshape(buf.shape[0], n, page_size, *buf.shape[2:])
+            return dst.at[:, pids].set(buf)
+        return _graft_leaf(dst, src, (0, slot) + (0,) * (dst.ndim - 2))
+
+    return jax.tree_util.tree_map_with_path(one, cache, states)
+
+
+def _paged_copy_impl(cache, src_pid, dst_pid):
+    """Copy-on-write: duplicate one arena page on every paged leaf."""
+    def one(path, a):
+        if _leaf_name(path) in _PAGED_LEAVES:
+            return a.at[:, dst_pid].set(a[:, src_pid])
+        return a
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+_PAGED_FNS: dict = {}
+
+
+def _paged_fns(page_size: int, shardings=None):
+    key = (page_size,
+           None if shardings is None else _sharding_key(shardings))
+    if key not in _PAGED_FNS:
+        admit = partial(_paged_admit_impl, page_size=page_size)
+        if shardings is None:
+            fns = (jax.jit(admit, donate_argnums=(0,)),
+                   jax.jit(_paged_copy_impl, donate_argnums=(0,)))
+        else:
+            fns = (jax.jit(admit, donate_argnums=(0,),
+                           in_shardings=(shardings, None, None, None),
+                           out_shardings=shardings),
+                   jax.jit(_paged_copy_impl, donate_argnums=(0,),
+                           in_shardings=(shardings, None, None),
+                           out_shardings=shardings))
+        _PAGED_FNS[key] = fns
+    return _PAGED_FNS[key]
+
+
+def make_paged_cache(cfg: ArchConfig, n_slots: int, n_pages: int,
+                     page_size: int, dtype):
+    """The paged twin of ``api.make_cache``: same pytree structure, but
+    every k/v leaf is a ``(lead, n_pages, page_size, KH, hd)`` arena
+    shared by all slots; other leaves keep their slot axis."""
+    dense = jax.eval_shape(
+        lambda: api.make_cache(cfg, n_slots, page_size, jnp.dtype(dtype)))
+
+    def one(path, leaf):
+        if _leaf_name(path) in _PAGED_LEAVES:
+            return jnp.zeros(
+                (leaf.shape[0], n_pages, page_size) + leaf.shape[3:],
+                leaf.dtype)
+        return jnp.zeros(leaf.shape, leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(one, dense)
+
+
+def _strip_paged(states):
+    """Truncate k/v leaves to zero length (their content lives in shared
+    arena pages); keeps the tree structure so the admit op still maps."""
+    def one(path, a):
+        if _leaf_name(path) in _PAGED_LEAVES:
+            return a[:, :, :0]
+        return a
+
+    return jax.tree_util.tree_map_with_path(one, states)
+
+
+# -- prefix index ------------------------------------------------------------
+
+
+def request_prefix_key(prompt: np.ndarray,
+                       frames: Optional[np.ndarray] = None) -> bytes:
+    """Whole-prompt identity: hash of (prompt tokens, encoder frames).
+
+    Frames are part of the key because encdec KV depends on them — two
+    requests with equal prompts but different audio share nothing.
+    """
+    h = hashlib.sha256(np.asarray(prompt, np.int32).tobytes())
+    if frames is not None:
+        h.update(np.ascontiguousarray(frames).tobytes())
+    return b"P:" + h.digest()
+
+
+def _chain_hash(prev: bytes, tokens: np.ndarray) -> bytes:
+    return hashlib.sha256(prev + np.asarray(tokens, np.int32).tobytes()
+                          ).digest()
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """Whole-prompt cache record: pages + first-token logits + the
+    slot-resident (non-paged) prefill states, enough to admit an
+    identical request with zero prefill compute."""
+
+    full_pages: Tuple[int, ...]
+    tail_page: int       # -1 when the prompt is page-aligned
+    tail_len: int        # prompt tokens in the tail page (0 if aligned)
+    n_tokens: int        # prompt length
+    logits: Any          # (1, 1, V) last-position prefill logits (device)
+    states_rest: Any     # prefill states with zero-length paged leaves
+
+    def pages(self) -> Tuple[int, ...]:
+        return self.full_pages + (
+            (self.tail_page,) if self.tail_page >= 0 else ())
+
+
+@dataclasses.dataclass
+class _PageEntry:
+    """Chained-hash record for one full page (``share='pages'``)."""
+
+    pid: int
+
+    def pages(self) -> Tuple[int, ...]:
+        return (self.pid,)
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """Result of a prefix lookup.
+
+    ``entry`` set -> whole-prompt hit: prefill can be skipped, the
+    entry's pages attach (tail via copy-on-write when the request will
+    decode into it).  ``pages`` set -> partial page-level hit: those
+    full prompt pages attach and are not rewritten.  Both empty -> miss.
+    """
+
+    entry: Optional[_PrefixEntry] = None
+    pages: Tuple[int, ...] = ()
+    tokens: int = 0                 # prompt tokens covered by the hit
+    keys: Tuple[bytes, ...] = ()    # index keys backing the hit (pinned
+    # against eviction while this admission is in flight)
+
+    @property
+    def skip_prefill(self) -> bool:
+        return self.entry is not None
+
+
+class _Slot(int):
+    """A slot id (int-compatible) carrying the admission's PrefixHit."""
+
+    hit: PrefixHit
+
+
+def _mk_slot(slot: int, hit: PrefixHit) -> "_Slot":
+    s = _Slot(slot)
+    s.hit = hit
+    return s
+
+
+# -- the protocol ------------------------------------------------------------
+
+
+@runtime_checkable
+class CachePool(Protocol):
+    """What the engine needs from a decode-cache pool.
+
+    Both pools satisfy it; the engine is pool-agnostic, which is what
+    makes slot-vs-paged parity testable (tests/test_serving.py).
+    ``alloc`` may return a plain int or an int subclass carrying the
+    admission's :class:`PrefixHit` as ``.hit``.
+    """
+
+    cache: Any
+    n_slots: int
+    s_max: int
+
+    def can_admit(self, req=None) -> bool: ...           # noqa: E704
+    def alloc(self, req=None) -> int: ...                # noqa: E704
+    def write(self, slot: int, states, req=None, logits=None) -> None: ...  # noqa: E704,E501
+    def free(self, slot: int) -> None: ...               # noqa: E704
+    def row(self, slot: int): ...                        # noqa: E704
+    def prefix_lookup(self, req) -> PrefixHit: ...       # noqa: E704
+    def stats(self) -> dict: ...                         # noqa: E704
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+               for a in jax.tree.leaves(tree))
+
+
+# -- slot pool ---------------------------------------------------------------
 
 
 class SlotCachePool:
@@ -150,8 +401,12 @@ class SlotCachePool:
     def active_slots(self) -> int:
         return self.n_slots - len(self._free)
 
-    def alloc(self) -> int:
-        """Claim a free slot; raises if none (callers check free_slots)."""
+    def can_admit(self, req=None) -> bool:
+        """Slot pools admit whenever a row is free (no page budget)."""
+        return bool(self._free)
+
+    def alloc(self, req=None) -> int:
+        """Claim a free slot; raises if none (callers check can_admit)."""
         if not self._free:
             raise RuntimeError("no free slot")
         return self._free.pop(0)
@@ -166,10 +421,383 @@ class SlotCachePool:
     def reset(self, slot: int) -> None:
         self.cache = self._zero(self.cache, jnp.int32(slot))
 
-    def write(self, slot: int, states: Any) -> None:
+    def write(self, slot: int, states: Any, req=None, logits=None) -> None:
         """Graft a batch-1 prefill state pytree into the slot's row."""
         self.cache = self._write(self.cache, states, jnp.int32(slot))
 
     def row(self, slot: int) -> Any:
         """The slot's cache row (leading axes kept), for tests/debugging."""
         return jax.tree.map(lambda a: a[:, slot], self.cache)
+
+    def prefix_lookup(self, req) -> PrefixHit:
+        """Slot pools never share prefixes: always a miss."""
+        return PrefixHit()
+
+    def stats(self) -> dict:
+        return {"kind": "slot", "n_slots": self.n_slots, "s_max": self.s_max,
+                "cache_bytes": _tree_bytes(self.cache)}
+
+    @staticmethod
+    def grow(cfg: ArchConfig, states, batch: int, s_max: int, dtype):
+        """Copy prefill-length caches into max-length decode allocations
+        (the pool-construction primitive behind ``write``; also the
+        sequential reference's single-request cache)."""
+        full = api.make_cache(cfg, batch, s_max, dtype)
+        return jax.tree.map(
+            lambda dst, src: _graft_leaf(dst, src, (0,) * dst.ndim),
+            full, states)
+
+
+def grow_cache(cfg: ArchConfig, states, batch: int, s_max: int, dtype):
+    """Deprecated: use ``SlotCachePool.grow`` (pool construction is the
+    CachePool surface now; this free function is gone next release)."""
+    warnings.warn("grow_cache is deprecated; use SlotCachePool.grow",
+                  DeprecationWarning, stacklevel=2)
+    return SlotCachePool.grow(cfg, states, batch, s_max, dtype)
+
+
+# -- paged pool --------------------------------------------------------------
+
+
+class PagedCachePool:
+    """Block-table paged decode cache with refcounts + prefix sharing.
+
+    One shared page arena instead of per-slot max-length rows: a slot
+    holding a ``prompt+gen`` of L tokens pins ``ceil(L/page_size)``
+    pages, not ``s_max`` — memory scales with the *load*, not the worst
+    case (the module docstring has the full design).
+
+    Host state: ``table`` (n_slots, pages_per_slot) int32 page ids,
+    ``ref`` per-page refcounts (slots and prefix-index entries each hold
+    one ref; a page frees when the last holder drops), a free-page
+    deque, and the LRU prefix index.  Admission that needs pages may
+    evict cold prefix entries (never pages still referenced by a slot).
+    """
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, s_max: int, dtype,
+                 *, page_size: int = 16, n_pages: int = 0,
+                 share: str = "exact",
+                 mesh: Optional[Any] = None, shardings: Optional[Any] = None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if share not in ("exact", "pages", "off"):
+            raise ValueError(f"share must be exact|pages|off, got {share}")
+        assert s_max <= cfg.max_seq, (s_max, cfg.max_seq)
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.mesh = mesh
+        self.page_size = page_size
+        self.pages_per_slot = -(-s_max // page_size)
+        # default: worst case (every slot at s_max) + the trash page —
+        # at that size the paged pool can never refuse what the slot
+        # pool would have served; size it DOWN to actually save memory.
+        self.n_pages = int(n_pages) or n_slots * self.pages_per_slot + 1
+        if self.n_pages < self.pages_per_slot + 1:
+            raise ValueError(
+                f"n_pages={self.n_pages} cannot fit one s_max={s_max} "
+                f"request ({self.pages_per_slot} pages) + the trash page")
+        self.share = share
+        self.cache = make_paged_cache(cfg, n_slots, self.n_pages, page_size,
+                                      dtype)
+        if mesh is None:
+            self.shardings = None
+            self._admit, self._copy = _paged_fns(page_size)
+        else:
+            self.shardings = shardings if shardings is not None else \
+                shr.pool_shardings(
+                    mesh, cfg, jax.eval_shape(lambda: self.cache), n_slots)
+            self.cache = jax.device_put(self.cache, self.shardings)
+            self._admit, self._copy = _paged_fns(page_size, self.shardings)
+        self.table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self.ref = np.zeros(self.n_pages, np.int32)
+        self.ref[TRASH_PAGE] = 1  # pinned forever
+        self._free_pages: Deque[int] = deque(range(1, self.n_pages))
+        self._free_slots: List[int] = list(range(n_slots))
+        self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self._slot_hit: List[Optional[PrefixHit]] = [None] * n_slots
+        self._index: "OrderedDict[bytes, Any]" = OrderedDict()  # LRU
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefill_skips = 0
+        self.cow_copies = 0
+        self.evictions = 0
+        self.peak_pages_in_use = 0
+
+    # -- geometry / accounting --
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def active_slots(self) -> int:
+        return self.n_slots - len(self._free_slots)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Allocated pages (slots + prefix index), excluding trash."""
+        return self.n_pages - 1 - len(self._free_pages)
+
+    def pages_needed(self, req) -> int:
+        """Positions the request will write = prompt + gen - 1 (the last
+        sampled token is returned, never fed back), in whole pages."""
+        total = req.prompt_len + req.max_new_tokens - 1
+        return -(-total // self.page_size)
+
+    # -- prefix index --
+
+    def _lookup(self, req, touch: bool) -> PrefixHit:
+        if self.share == "off" or req is None:
+            return PrefixHit()
+        key = request_prefix_key(req.prompt, req.frames)
+        e = self._index.get(key)
+        if isinstance(e, _PrefixEntry):
+            if touch:
+                self._index.move_to_end(key)
+            return PrefixHit(entry=e, tokens=e.n_tokens, keys=(key,))
+        if self.share == "pages":
+            ps = self.page_size
+            h = b""
+            pages: List[int] = []
+            keys: List[bytes] = []
+            for i in range(req.prompt_len // ps):
+                h = _chain_hash(h, req.prompt[i * ps:(i + 1) * ps])
+                pe = self._index.get(b"C:" + h)
+                if not isinstance(pe, _PageEntry):
+                    break
+                pages.append(pe.pid)
+                keys.append(b"C:" + h)
+                if touch:
+                    self._index.move_to_end(b"C:" + h)
+            if pages:
+                return PrefixHit(pages=tuple(pages), tokens=len(pages) * ps,
+                                 keys=tuple(keys))
+        return PrefixHit()
+
+    def prefix_lookup(self, req) -> PrefixHit:
+        """Non-mutating query (no LRU touch, no pinning)."""
+        return self._lookup(req, touch=False)
+
+    def _drop_entry(self, key: bytes) -> None:
+        e = self._index.pop(key)
+        self.evictions += 1
+        for pid in e.pages():
+            self.ref[pid] -= 1
+            if self.ref[pid] == 0:
+                self._free_pages.append(pid)
+
+    def _evictable(self, exclude: Tuple[bytes, ...]) -> int:
+        """Pages that would free if every non-excluded entry were evicted
+        (exact: counts pages whose every ref is held by those entries)."""
+        held: Counter = Counter()
+        for k, e in self._index.items():
+            if k in exclude:
+                continue
+            for pid in e.pages():
+                held[pid] += 1
+        return sum(1 for pid, c in held.items() if self.ref[pid] == c)
+
+    def _take_page(self, exclude: Tuple[bytes, ...] = ()) -> int:
+        while not self._free_pages and self._index:
+            for k in list(self._index.keys()):
+                if k not in exclude:
+                    self._drop_entry(k)
+                    break
+            else:
+                break  # only pinned entries left
+        if not self._free_pages:
+            raise RuntimeError(
+                "page arena exhausted (callers gate on can_admit)")
+        return self._free_pages.popleft()
+
+    def clear_prefix(self) -> None:
+        """Drop every prefix-cache entry (releases its page refs)."""
+        for k in list(self._index.keys()):
+            self._drop_entry(k)
+
+    # -- admission --
+
+    def can_admit(self, req=None) -> bool:
+        """A free slot AND enough pages (free now, or freeable by
+        evicting prefix entries that don't back this request's hit)."""
+        if not self._free_slots:
+            return False
+        if req is None:
+            return True
+        hit = self._lookup(req, touch=False)
+        needed = self.pages_needed(req) - self._attached_pages(req, hit)
+        if needed <= len(self._free_pages):
+            return True
+        return needed <= len(self._free_pages) + self._evictable(hit.keys)
+
+    def _attached_pages(self, req, hit: PrefixHit) -> int:
+        """Pages a hit contributes without a fresh allocation (the COW'd
+        boundary page still costs a new page, so it doesn't count)."""
+        if hit.entry is not None:
+            n = len(hit.entry.full_pages)
+            if hit.entry.tail_page >= 0 and req.max_new_tokens == 1:
+                n += 1  # read-only tail: attach, no COW
+            return n
+        return len(hit.pages)
+
+    def alloc(self, req=None) -> int:
+        """Claim a slot and reserve its whole page budget: attach shared
+        pages (ref++), COW the boundary page if this request will decode
+        into it, allocate the rest fresh.  Returns an int-compatible
+        slot whose ``.hit`` carries the admission's PrefixHit."""
+        if req is None:
+            raise ValueError("PagedCachePool.alloc needs the request "
+                             "(pages are sized to prompt + gen budget)")
+        if not self._free_slots:
+            raise RuntimeError("no free slot")
+        n_total = self.pages_needed(req)
+        if n_total > self.pages_per_slot:
+            raise ValueError(
+                f"request {req.rid}: needs {n_total} pages > "
+                f"pages_per_slot={self.pages_per_slot}")
+        hit = self._lookup(req, touch=True)
+        slot = self._free_slots.pop(0)
+        row: List[int] = []
+        if hit.entry is not None:
+            e = hit.entry
+            for pid in e.full_pages:
+                self.ref[pid] += 1
+                row.append(pid)
+            if e.tail_page >= 0:
+                if req.max_new_tokens > 1:
+                    # the sharer will write positions >= prompt_len into
+                    # this page concurrently with other sharers: copy
+                    dst = self._take_page(hit.keys)
+                    self.cache = self._copy(self.cache,
+                                            jnp.int32(e.tail_page),
+                                            jnp.int32(dst))
+                    self.cow_copies += 1
+                    self.ref[dst] += 1
+                    row.append(dst)
+                else:
+                    self.ref[e.tail_page] += 1
+                    row.append(e.tail_page)
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += e.n_tokens
+        elif hit.pages:
+            for pid in hit.pages:
+                self.ref[pid] += 1
+                row.append(pid)
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += len(hit.pages) * self.page_size
+        while len(row) < n_total:
+            pid = self._take_page(hit.keys)
+            self.ref[pid] += 1
+            row.append(pid)
+        self.table[slot, :] = TRASH_PAGE
+        self.table[slot, :len(row)] = row
+        self._slot_pages[slot] = list(row)
+        self._slot_hit[slot] = hit
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+        return _mk_slot(slot, hit)
+
+    def write(self, slot: int, states: Any, req=None, logits=None) -> None:
+        """Device writes for an admission ``alloc`` reserved.
+
+        Whole-prompt hit: graft the cached slot-resident states (no
+        arena writes — the pages already hold the prefill KV).  Miss /
+        partial hit: scatter the prefill KV into the slot's prompt
+        pages (shared ones are redirected to the trash page — their
+        content is already there) and graft the rest of the state into
+        the slot row; then register the prompt in the prefix index.
+        """
+        hit = self._slot_hit[slot] or PrefixHit()
+        if hit.skip_prefill:
+            self.prefill_skips += 1
+            self.cache = self._admit(self.cache, hit.entry.states_rest,
+                                     jnp.zeros((0,), jnp.int32),
+                                     jnp.int32(slot))
+            return
+        if req is None:
+            raise ValueError("PagedCachePool.write needs the request")
+        f, r = divmod(req.prompt_len, self.page_size)
+        n_prompt = f + (1 if r else 0)
+        pids = self.table[slot, :n_prompt].copy()
+        # pages-mode shared prefix: identical content is already in the
+        # arena; rewriting it would race concurrent readers (and across
+        # prompt lengths would change it by ULPs) — write to trash
+        pids[:len(hit.pages)] = TRASH_PAGE
+        self.cache = self._admit(self.cache, states,
+                                 jnp.asarray(pids, jnp.int32),
+                                 jnp.int32(slot))
+        if self.share != "off":
+            self._register(slot, req, states, logits)
+
+    def _register(self, slot: int, req, states, logits) -> None:
+        key = request_prefix_key(req.prompt, req.frames)
+        ps = self.page_size
+        f, r = divmod(req.prompt_len, ps)
+        if key not in self._index:
+            full = tuple(int(p) for p in self.table[slot, :f])
+            tail = int(self.table[slot, f]) if r else -1
+            for pid in full + ((tail,) if r else ()):
+                self.ref[pid] += 1
+            self._index[key] = _PrefixEntry(
+                full_pages=full, tail_page=tail, tail_len=r,
+                n_tokens=req.prompt_len, logits=logits,
+                states_rest=_strip_paged(states))
+        if self.share == "pages":
+            h = b""
+            for i in range(f):
+                h = _chain_hash(h, req.prompt[i * ps:(i + 1) * ps])
+                ck = b"C:" + h
+                if ck not in self._index:
+                    pid = int(self.table[slot, i])
+                    self.ref[pid] += 1
+                    self._index[ck] = _PageEntry(pid)
+
+    def free(self, slot: int) -> None:
+        """Drop the slot's page refs (pages free when the last holder —
+        slot or prefix entry — lets go) and point its table row at the
+        trash page so stale tick writes can't corrupt recycled pages."""
+        if slot in self._free_slots or not 0 <= slot < self.n_slots:
+            raise ValueError(f"bad free of slot {slot}")
+        for pid in self._slot_pages[slot]:
+            self.ref[pid] -= 1
+            if self.ref[pid] == 0:
+                self._free_pages.append(pid)
+        self._slot_pages[slot] = []
+        self._slot_hit[slot] = None
+        self.table[slot, :] = TRASH_PAGE
+        self._free_slots.append(slot)
+        self._free_slots.sort()
+
+    def row(self, slot: int) -> Any:
+        """Dense view of the slot's cache (gathers its pages), trimmed to
+        s_max on the sequence axis — tests/debugging only."""
+        idx = self.table[slot]
+
+        def one(path, a):
+            if _leaf_name(path) in _PAGED_LEAVES:
+                pages = a[:, idx]  # (lead, pages_per_slot, ps, KH, hd)
+                dense = pages.reshape(a.shape[0], -1, *a.shape[3:])
+                return dense[:, :self.s_max]
+            return a[:, slot]
+
+        return jax.tree_util.tree_map_with_path(one, self.cache)
+
+    def stats(self) -> dict:
+        return {
+            "kind": "paged",
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "pages_per_slot": self.pages_per_slot,
+            "pages_in_use": self.pages_in_use,
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "prefix_entries": len(self._index),
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefill_skips": self.prefill_skips,
+            "cow_copies": self.cow_copies,
+            "evictions": self.evictions,
+            "cache_bytes": _tree_bytes(self.cache),
+        }

@@ -10,16 +10,30 @@ makes the same throughput argument at the FPGA level).  The loop:
 
 * **Prefill** runs per request at its own prompt length (one lowering per
   distinct length) and grafts the batch-1 state into a
-  :class:`~repro.serving.cache.SlotCachePool` row; the first token is
+  :class:`~repro.serving.cache.CachePool` row; the first token is
   sampled from the prefill logits (that timestamp is TTFT).
 * **Decode ticks** run ONE fused jitted step over the whole pool with a
-  per-slot ``cur_index`` vector; sampling (greedy / temperature / top-k
-  through the Goldschmidt softmax) happens inside the jit, so only the
-  (n_slots,) chosen token ids cross to the host per tick.
+  per-slot ``cur_index`` vector; sampling (greedy / temperature /
+  per-request top-k through the Goldschmidt softmax) happens inside the
+  jit, so only the (n_slots,) chosen token ids cross to the host per
+  tick.
 * Finished requests free their slot and the next queued request takes
   it mid-flight; recycling cannot leak stale state because the prefill
   graft replaces the unmasked leaves (SSM/conv/cross-KV) whole and the
   decode mask hides KV rows beyond ``cur_index`` (see cache.py).
+
+The pool is chosen by ``EngineConfig.pool``:
+
+* ``"slot"`` — per-slot max-length rows (:class:`SlotCachePool`).
+* ``"paged"`` — the block-table page arena (:class:`PagedCachePool`):
+  admission reserves ``ceil((prompt+gen)/page_size)`` pages instead of a
+  max-length row, the fused tick reads/writes KV through a
+  ``(n_slots, pages_per_slot)`` block-table operand, and hash-keyed
+  prefix sharing lets identical prompts prefill once and decode off
+  shared pages.  A freed slot's table row points at the reserved trash
+  page, so the stale writes the tick issues for inactive slots are
+  harmless.  Greedy fp32 output is token-for-token identical to the
+  slot pool (tests/test_serving.py::TestPagedServing).
 
 ``scheduler='static'`` degrades the same machinery to lockstep batching
 (admit a full group, no admission until the whole group finishes) — the
@@ -41,11 +55,11 @@ Tensor-parallel serving
 -----------------------
 Pass ``mesh`` (axes ``("data", "model")``, launch/mesh.py) and the
 engine runs the whole stack sharded: params are placed by the training
-rule table (runtime/sharding.py), the slot pool by the decode-cache
-policy (slots over 'data', KV head_dim and SSM d_inner over 'model'),
-and the fused tick is jitted with matching in/out shardings so the
-donated cache round-trips with **no resharding** — per-slot decode, the
-Goldschmidt softmax sampler and admission grafts all stay on-device
+rule table (runtime/sharding.py), the pool by the decode-cache policy
+(slots — or arena pages — over 'data', KV head_dim and SSM d_inner over
+'model'), and the fused tick is jitted with matching in/out shardings so
+the donated cache round-trips with **no resharding** — per-slot decode,
+the Goldschmidt softmax sampler and admission grafts all stay on-device
 across the mesh; only the (n_slots,) token ids cross to the host, as on
 one device.  Greedy fp32 output is token-for-token identical to the
 unsharded engine (tests/test_multidevice.py).
@@ -63,7 +77,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -74,12 +88,15 @@ from repro.configs.base import ArchConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import api
 from repro.runtime import sharding as shr
-from repro.serving.cache import SlotCachePool
-from repro.serving.requests import (FINISHED, QUEUED, RUNNING, Request,
-                                    RequestOutput, RequestState)
+from repro.serving.cache import (CachePool, PagedCachePool, SlotCachePool,
+                                 make_paged_cache)
+from repro.serving.requests import (FINISHED, QUEUED, RUNNING,
+                                    GenerationResult, Request, RequestState,
+                                    SamplingParams, ServeResult)
 from repro.serving.sampler import sample_tokens
 
 SCHEDULERS = ("continuous", "static")
+POOLS = ("slot", "paged")
 
 
 def prefill_batch(cfg: ArchConfig, req: Request) -> dict:
@@ -103,15 +120,20 @@ class EngineConfig:
     n_slots: int = 4
     s_max: int = 0  # 0 -> cfg.max_seq
     max_prefill_per_tick: int = 1  # prefills admitted between decode ticks
-    top_k: int = 0  # static sampling knob (0 = full vocab)
+    top_k: int = 0  # default top-k for requests whose SamplingParams has 0
     seed: int = 0   # PRNG stream for stochastic sampling
+    pool: str = "slot"      # slot | paged
+    page_size: int = 16     # paged: tokens per arena page
+    n_pages: int = 0        # paged: arena size; 0 -> worst case + trash
+    prefix: str = "exact"   # paged: prefix sharing — exact | pages | off
 
 
 @dataclasses.dataclass
 class ServeMetrics:
     n_requests: int = 0
     prefill_tokens: int = 0   # prompt tokens processed by prefill
-    first_tokens: int = 0     # tokens sampled from prefill logits
+    prefill_skips: int = 0    # prefills skipped via exact prefix hits
+    first_tokens: int = 0     # tokens sampled from prefill(-cache) logits
     decode_tokens: int = 0    # tokens sampled from decode ticks
     decode_ticks: int = 0
     prefill_time_s: float = 0.0
@@ -120,6 +142,9 @@ class ServeMetrics:
     n_slots: int = 0
     makespan_s: float = 0.0   # first admission -> last completion
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    prefix_hits: int = 0        # admissions served (fully or partly) shared
+    prefix_hit_tokens: int = 0  # prompt tokens covered by shared pages
+    pool: dict = dataclasses.field(default_factory=dict)  # pool.stats()
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -152,7 +177,7 @@ class ServeMetrics:
 
 
 class Engine:
-    """Continuous-batching engine over one model + one slot pool.
+    """Continuous-batching engine over one model + one cache pool.
 
     ``mesh`` (optional) runs the whole stack tensor/data-parallel over a
     ``("data", "model")`` device mesh — see the module docstring.
@@ -163,9 +188,15 @@ class Engine:
                  mesh: Optional[Mesh] = None):
         self.cfg = cfg
         self.ecfg = engine_cfg or EngineConfig()
+        if self.ecfg.pool not in POOLS:
+            raise ValueError(f"pool must be one of {POOLS}")
         self.s_max = self.ecfg.s_max or cfg.max_seq
         self.mesh = mesh
         self._policy = cfg.policy()
+        self._paged = self.ecfg.pool == "paged"
+        self._pages_per_slot = -(-self.s_max // self.ecfg.page_size)
+        self._n_pages = self.ecfg.n_pages or (
+            self.ecfg.n_slots * self._pages_per_slot + 1)
         if mesh is None:
             self.params = params
             self._dp = ()
@@ -178,30 +209,50 @@ class Engine:
             self._param_sh = shr.tree_shardings(
                 mesh, jax.eval_shape(lambda: params))
             self.params = jax.device_put(params, self._param_sh)
-            cache_specs = jax.eval_shape(lambda: api.make_cache(
-                cfg, self.ecfg.n_slots, self.s_max, jnp.dtype(cfg.dtype)))
+            if self._paged:
+                cache_specs = jax.eval_shape(lambda: make_paged_cache(
+                    cfg, self.ecfg.n_slots, self._n_pages,
+                    self.ecfg.page_size, jnp.dtype(cfg.dtype)))
+            else:
+                cache_specs = jax.eval_shape(lambda: api.make_cache(
+                    cfg, self.ecfg.n_slots, self.s_max,
+                    jnp.dtype(cfg.dtype)))
             self._cache_sh = shr.pool_shardings(
                 mesh, cfg, cache_specs, self.ecfg.n_slots)
         self._prefill = jax.jit(make_prefill_step(cfg, mesh=mesh, dp=()))
-        self._decode = make_decode_step(cfg, mesh=mesh, dp=self._dp)
-        self._tick_fns: Dict[bool, object] = {}
-        self._first_fns: Dict[bool, object] = {}
+        self._decode = make_decode_step(
+            cfg, mesh=mesh, dp=self._dp,
+            page_size=self.ecfg.page_size if self._paged else 0)
+        self._tick_fns: Dict[tuple, object] = {}
+        self._first_fns: Dict[tuple, object] = {}
         self._key = jax.random.key(self.ecfg.seed)
+
+    def _make_pool(self) -> CachePool:
+        if self._paged:
+            return PagedCachePool(
+                self.cfg, self.ecfg.n_slots, self.s_max,
+                jnp.dtype(self.cfg.dtype), page_size=self.ecfg.page_size,
+                n_pages=self._n_pages, share=self.ecfg.prefix,
+                mesh=self.mesh, shardings=self._cache_sh)
+        return SlotCachePool(self.cfg, self.ecfg.n_slots, self.s_max,
+                             jnp.dtype(self.cfg.dtype), mesh=self.mesh,
+                             shardings=self._cache_sh)
+
+    def _effective_k(self, req: Request) -> int:
+        return req.sampling.top_k or self.ecfg.top_k
 
     # -- fused jitted steps --------------------------------------------------
 
-    def _tick_fn(self, stochastic: bool):
-        if stochastic not in self._tick_fns:
-            cfg, policy, top_k = self.cfg, self._policy, self.ecfg.top_k
-            decode = self._decode
+    def _tick_fn(self, stochastic: bool, max_top_k: int = 0):
+        """The fused pool-wide decode tick, compiled per
+        (stochastic, max top-k bound); paged engines thread the block
+        table as one extra device operand."""
+        fkey = (stochastic, max_top_k)
+        if fkey not in self._tick_fns:
+            cfg, policy = self.cfg, self._policy
+            decode, paged = self._decode, self._paged
 
-            def tick(params, cache, cur_index, tokens, temps, rids, key):
-                step = {"token": tokens}
-                if cfg.pos == "mrope":
-                    # text-style positions: the three streams coincide
-                    step["pos_ids"] = jnp.broadcast_to(
-                        cur_index[None, :, None], (3, tokens.shape[0], 1))
-                logits, cache = decode(params, cache, cur_index, step)
+            def sample(logits, cur_index, temps, topks, rids, key):
                 if stochastic:
                     # per-row streams keyed on (request, position): the
                     # token being sampled sits at absolute position
@@ -210,26 +261,52 @@ class Engine:
                         jax.random.fold_in(key, r), c + 1))(rids, cur_index)
                 else:
                     keys = None
-                nxt = sample_tokens(
+                return sample_tokens(
                     logits[:, -1, :], policy=policy,
-                    temperature=temps if stochastic else 0.0, top_k=top_k,
-                    key=keys)
-                return nxt, cache
+                    temperature=temps if stochastic else 0.0,
+                    top_k=topks if max_top_k else 0,
+                    max_top_k=max_top_k or None, key=keys)
+
+            def step_for(tokens, cur_index):
+                step = {"token": tokens}
+                if cfg.pos == "mrope":
+                    # text-style positions: the three streams coincide
+                    step["pos_ids"] = jnp.broadcast_to(
+                        cur_index[None, :, None], (3, tokens.shape[0], 1))
+                return step
+
+            if paged:
+                def tick(params, cache, table, cur_index, tokens, temps,
+                         topks, rids, key):
+                    logits, cache = decode(params, cache, cur_index,
+                                           step_for(tokens, cur_index),
+                                           page_table=table)
+                    return sample(logits, cur_index, temps, topks, rids,
+                                  key), cache
+            else:
+                def tick(params, cache, cur_index, tokens, temps, topks,
+                         rids, key):
+                    logits, cache = decode(params, cache, cur_index,
+                                           step_for(tokens, cur_index))
+                    return sample(logits, cur_index, temps, topks, rids,
+                                  key), cache
 
             jit_kw = {}
             if self.mesh is not None:
+                n_ops = 7 if paged else 6
                 jit_kw = dict(
-                    in_shardings=(self._param_sh, self._cache_sh,
-                                  None, None, None, None, None),
+                    in_shardings=(self._param_sh, self._cache_sh) +
+                                 (None,) * n_ops,
                     out_shardings=(NamedSharding(self.mesh, P()),
                                    self._cache_sh))
-            self._tick_fns[stochastic] = jax.jit(
+            self._tick_fns[fkey] = jax.jit(
                 tick, donate_argnums=(1,), **jit_kw)
-        return self._tick_fns[stochastic]
+        return self._tick_fns[fkey]
 
-    def _first_fn(self, stochastic: bool):
-        if stochastic not in self._first_fns:
-            policy, top_k = self._policy, self.ecfg.top_k
+    def _first_fn(self, stochastic: bool, top_k: int = 0):
+        fkey = (stochastic, top_k)
+        if fkey not in self._first_fns:
+            policy = self._policy
 
             def first(logits, temp, key):
                 return sample_tokens(
@@ -237,8 +314,8 @@ class Engine:
                     temperature=temp if stochastic else 0.0, top_k=top_k,
                     key=key if stochastic else None)
 
-            self._first_fns[stochastic] = jax.jit(first)
-        return self._first_fns[stochastic]
+            self._first_fns[fkey] = jax.jit(first)
+        return self._first_fns[fkey]
 
     def _request_key(self, rid: int, pos: int):
         """Key for the token at absolute position ``pos`` of request
@@ -253,23 +330,40 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: prompt {req.prompt_len} + gen "
                 f"{req.max_new_tokens} exceeds s_max={self.s_max}")
+        if self._paged:
+            total = req.prompt_len + req.max_new_tokens - 1
+            need = -(-total // self.ecfg.page_size)
+            if need > self._n_pages - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} pages but the arena "
+                    f"only has {self._n_pages - 1} (plus the trash page)")
         if self.cfg.family == "encdec" and req.frames is None:
             raise ValueError(f"request {req.rid}: encdec needs frames")
 
-    def _do_prefill(self, st: RequestState, pool: SlotCachePool,
+    def _do_prefill(self, st: RequestState, pool: CachePool,
                     metrics: ServeMetrics, clock) -> None:
         req = st.request
-        stochastic = req.temperature > 0
+        sp = req.sampling
+        stochastic = sp.stochastic
         t0 = time.perf_counter()
-        logits, states, _ = self._prefill(self.params,
-                                          prefill_batch(self.cfg, req))
-        first = self._first_fn(stochastic)(
-            logits, jnp.float32(req.temperature),
+        # alloc first: a paged pool resolves prefix hits here, and a
+        # whole-prompt hit means the prefill never runs at all
+        slot = pool.alloc(req)
+        hit = getattr(slot, "hit", None)
+        if hit is not None and hit.skip_prefill:
+            logits, states = hit.entry.logits, None
+            metrics.prefill_skips += 1
+        else:
+            logits, states, _ = self._prefill(self.params,
+                                              prefill_batch(self.cfg, req))
+            metrics.prefill_tokens += req.prompt_len
+        first = self._first_fn(stochastic, self._effective_k(req))(
+            logits, jnp.float32(sp.temperature),
             self._request_key(req.rid, req.prompt_len) if stochastic
             else self._key)
         token = int(jax.block_until_ready(first)[0])
-        st.slot = pool.alloc()
-        pool.write(st.slot, states)
+        st.slot = int(slot)
+        pool.write(st.slot, states, req=req, logits=logits)
         # settle the graft inside the prefill window so its async device
         # work isn't billed to the next decode tick's timing
         jax.block_until_ready(pool.cache)
@@ -277,11 +371,10 @@ class Engine:
         st.tokens.append(token)
         st.t_first_token = clock()
         st.status = RUNNING
-        metrics.prefill_tokens += req.prompt_len
         metrics.first_tokens += 1
         metrics.ttft_s[req.rid] = st.ttft
 
-    def _finish(self, st: RequestState, pool: SlotCachePool, clock) -> None:
+    def _finish(self, st: RequestState, pool: CachePool, clock) -> None:
         st.t_finish = clock()
         st.status = FINISHED
         pool.free(st.slot)
@@ -290,13 +383,18 @@ class Engine:
     # -- the serve loop ------------------------------------------------------
 
     def run(self, requests: Sequence[Request], *,
-            scheduler: str = "continuous") -> (
-            Dict[int, RequestOutput], ServeMetrics):
-        """Serve ``requests`` to completion; returns (outputs, metrics).
+            scheduler: str = "continuous") -> ServeResult:
+        """Serve ``requests`` to completion.
+
+        Returns a :class:`ServeResult` — a mapping ``rid ->``
+        :class:`GenerationResult` that also unpacks as the legacy
+        ``(outputs, metrics)`` pair.
 
         The engine clock is wall time from call start; a request with
         ``arrival_time`` in the future is invisible to the scheduler
         until the clock passes it (the loop sleeps when idle).
+        Admission is FIFO: a head-of-line request the pool cannot fit
+        yet waits for active slots to drain (page budget included).
         """
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler must be one of {SCHEDULERS}")
@@ -307,9 +405,8 @@ class Engine:
         for req in requests:
             self._validate(req)
         n = self.ecfg.n_slots
-        pool = SlotCachePool(self.cfg, n, self.s_max,
-                             jnp.dtype(self.cfg.dtype), mesh=self.mesh,
-                             shardings=self._cache_sh)
+        pool = self._make_pool()
+        max_top_k = max((self._effective_k(r) for r in requests), default=0)
         metrics = ServeMetrics(n_requests=len(requests), n_slots=n)
         t_start = time.perf_counter()
         clock = lambda: time.perf_counter() - t_start  # noqa: E731
@@ -323,10 +420,13 @@ class Engine:
         ready: Deque[RequestState] = deque()
         active: Dict[int, RequestState] = {}  # slot -> state
 
-        # host-side mirrors of the per-slot device vectors
+        # host-side mirrors of the per-slot device vectors; finished
+        # slots are zeroed (a paged pool's trash-page writes then always
+        # target (page 0, offset 0) instead of wandering with stale cur)
         cur = np.zeros(n, np.int32)
         last_tok = np.zeros(n, np.int32)
         temps = np.zeros(n, np.float32)
+        topks = np.zeros(n, np.int32)
         rids = np.zeros(n, np.int32)
 
         def admit_arrivals():
@@ -344,33 +444,58 @@ class Engine:
             active[st.slot] = st
             cur[st.slot] = st.cur_index
             last_tok[st.slot] = st.tokens[-1]
-            temps[st.slot] = st.request.temperature
+            temps[st.slot] = st.request.sampling.temperature
+            topks[st.slot] = self._effective_k(st.request)
             rids[st.slot] = st.request.rid
+
+        def clear(slot: int):
+            cur[slot] = 0
+            last_tok[slot] = 0
+            temps[slot] = 0.0
+            topks[slot] = 0
+            rids[slot] = 0
 
         while pending or ready or active:
             admit_arrivals()
+            admitted = 0
             if scheduler == "continuous":
                 budget = self.ecfg.max_prefill_per_tick
-                while ready and pool.free_slots and budget > 0:
+                while (ready and budget > 0
+                       and pool.can_admit(ready[0].request)):
                     start(ready.popleft())
                     budget -= 1
+                    admitted += 1
             else:  # static lockstep: full group in, nothing until group out
                 if not active and ready:
-                    while ready and pool.free_slots:
+                    while ready and pool.can_admit(ready[0].request):
                         start(ready.popleft())
+                        admitted += 1
 
             if not active:
+                if ready and not pending and not admitted:
+                    # nothing running, nothing arriving, nothing admitted
+                    # this pass, head-of-line refused: the pool can never
+                    # satisfy it
+                    raise RuntimeError(
+                        f"request {ready[0].request.rid} cannot be "
+                        f"admitted and no active request can unblock it "
+                        f"(pool: {pool.stats()})")
                 if pending:  # idle until the next arrival
                     time.sleep(max(0.0, min(
                         pending[0].t_arrive - clock(), 0.005)))
                 continue
 
             stochastic = bool(np.any(temps[list(active)] > 0))
+            tick = self._tick_fn(stochastic, max_top_k)
+            operands = (jnp.asarray(cur), jnp.asarray(last_tok[:, None]),
+                        jnp.asarray(temps), jnp.asarray(topks),
+                        jnp.asarray(rids), self._key)
             t0 = time.perf_counter()
-            nxt, pool.cache = self._tick_fn(stochastic)(
-                self.params, pool.cache, jnp.asarray(cur),
-                jnp.asarray(last_tok[:, None]), jnp.asarray(temps),
-                jnp.asarray(rids), self._key)
+            if self._paged:
+                nxt, pool.cache = tick(self.params, pool.cache,
+                                       jnp.asarray(pool.table), *operands)
+            else:
+                nxt, pool.cache = tick(self.params, pool.cache, *operands)
             nxt = np.asarray(jax.block_until_ready(nxt))
             metrics.decode_time_s += time.perf_counter() - t0
             metrics.decode_ticks += 1
@@ -386,22 +511,29 @@ class Engine:
                     # group drains — admission is gated on `not active`.
                     del active[slot]
                     self._finish(st, pool, clock)
+                    clear(slot)
                 else:
                     cur[slot] = st.cur_index
                     last_tok[slot] = st.tokens[-1]
 
         metrics.makespan_s = clock()
+        stats = pool.stats()
+        metrics.pool = stats
+        metrics.prefix_hits = stats.get("prefix_hits", 0)
+        metrics.prefix_hit_tokens = stats.get("prefix_hit_tokens", 0)
         outputs = {}
         for st in states:
             assert st.status == FINISHED, (st.request.rid, st.status)
-            outputs[st.request.rid] = RequestOutput(
+            outputs[st.request.rid] = GenerationResult(
                 rid=st.request.rid,
                 prompt_len=st.request.prompt_len,
                 tokens=np.asarray(st.tokens, np.int32),
                 ttft_s=st.ttft,
                 finish_s=st.t_finish - st.t_arrive,
+                finish_reason=st.finish_reason,
+                metrics=metrics,
             )
-        return outputs, metrics
+        return ServeResult(outputs, metrics)
 
     def warmup(self, prompt_lens: Sequence[int], *,
                stochastic: bool = False) -> None:
@@ -411,7 +543,8 @@ class Engine:
                     # a boundary prompt (s == s_max) only fits gen 1; its
                     # tick compiles via the other lengths or on first run
                     max_new_tokens=2 if s + 1 <= self.s_max else 1,
-                    temperature=0.5 if stochastic else 0.0,
+                    sampling=SamplingParams(
+                        temperature=0.5 if stochastic else 0.0),
                     frames=(np.zeros((self.cfg.enc_seq, self.cfg.d_model),
                                      np.float32)
                             if self.cfg.family == "encdec" else None))
@@ -425,15 +558,20 @@ _SEQ_FNS: Dict[ArchConfig, tuple] = {}  # jit cache across reference calls
 def generate_sequential(cfg: ArchConfig, params, request: Request, *,
                         top_k: int = 0,
                         s_max: Optional[int] = None,
-                        seed: int = 0) -> np.ndarray:
+                        seed: int = 0) -> GenerationResult:
     """Single-request reference: prefill + batch-1 decode loop.
 
     Uses the same model entry points, the same sampler and — for
     stochastic requests — the same (rid, position)-keyed PRNG streams as
     the engine (``seed`` must match ``EngineConfig.seed``), so an
-    engine-vs-sequential mismatch isolates the serving machinery (slot
+    engine-vs-sequential mismatch isolates the serving machinery (cache
     pool, per-slot cur_index, recycling, tick composition) rather than
     sampler or kernel noise.
+
+    Sampling knobs come from ``request.sampling``; the ``top_k`` kwarg
+    is a deprecated fallback used only when the request carries none.
+    Returns a :class:`GenerationResult` (array-like: ``np.asarray`` of
+    it is the token vector, as before).
     """
     policy = cfg.policy()
     s_max = s_max or cfg.max_seq
@@ -442,7 +580,9 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
                          jax.jit(make_decode_step(cfg), donate_argnums=(1,)))
     prefill, decode = _SEQ_FNS[cfg]
 
-    temp = float(request.temperature)
+    sp = request.sampling
+    temp = float(sp.temperature)
+    k = sp.top_k or top_k
     base = jax.random.key(seed)
 
     def tok_key(pos: int):
@@ -452,13 +592,14 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
             jax.random.fold_in(base, jnp.int32(request.rid)), jnp.int32(pos))
 
     logits, states, _ = prefill(params, prefill_batch(cfg, request))
-    from repro.serving.cache import grow_cache
-
-    cache = grow_cache(cfg, states, 1, s_max, jnp.dtype(cfg.dtype))
-    out = [int(sample_tokens(logits[:, -1, :], policy=policy, top_k=top_k,
+    cache = SlotCachePool.grow(cfg, states, 1, s_max, jnp.dtype(cfg.dtype))
+    out = [int(sample_tokens(logits[:, -1, :], policy=policy, top_k=k,
                              temperature=temp,
                              key=tok_key(request.prompt_len))[0])]
+    stopped = out[-1] == sp.stop
     for i in range(request.max_new_tokens - 1):
+        if stopped:
+            break
         cur = jnp.int32(request.prompt_len + i)
         step = {"token": jnp.asarray([[out[-1]]], jnp.int32)}
         if cfg.pos == "mrope":
@@ -466,6 +607,11 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
                                        jnp.int32)
         lg, cache = decode(params, cache, cur, step)
         out.append(int(sample_tokens(
-            lg[:, -1, :], policy=policy, top_k=top_k, temperature=temp,
+            lg[:, -1, :], policy=policy, top_k=k, temperature=temp,
             key=tok_key(request.prompt_len + i + 1))[0]))
-    return np.asarray(out, np.int32)
+        stopped = out[-1] == sp.stop
+    from repro.serving.requests import FINISH_LENGTH, FINISH_STOP
+    return GenerationResult(
+        rid=request.rid, prompt_len=request.prompt_len,
+        tokens=np.asarray(out, np.int32), ttft_s=0.0, finish_s=0.0,
+        finish_reason=FINISH_STOP if stopped else FINISH_LENGTH)

@@ -1,16 +1,24 @@
-"""Request lifecycle for the continuous-batching engine.
+"""Request lifecycle + result types for the continuous-batching engine.
 
 A :class:`Request` is what a client submits: prompt tokens, a generation
-budget and sampling knobs.  The engine wraps it in a
+budget and a frozen :class:`SamplingParams`.  The engine wraps it in a
 :class:`RequestState` that tracks the slot assignment, the emitted
 tokens and the latency timestamps (arrival -> first token -> finish),
-from which TTFT and per-request decode throughput derive.
+and hands back a :class:`GenerationResult` per request (collected in a
+:class:`ServeResult` for a whole run).
+
+API history: sampling used to be loose ``temperature``/``top_k`` kwargs
+threaded through ``Engine.run``/``generate_sequential``/``serve.py``;
+they are now one ``SamplingParams`` carried on the request.  The old
+``Request(temperature=...)`` kwarg and ``EngineConfig.top_k`` remain as
+deprecated shims for one release (they populate / default into
+``SamplingParams``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -18,13 +26,44 @@ QUEUED = "queued"      # admitted, waiting for a free slot
 RUNNING = "running"    # prefilled into a slot, decoding
 FINISHED = "finished"  # generation budget exhausted, slot freed
 
+FINISH_LENGTH = "length"  # max_new_tokens exhausted
+FINISH_STOP = "stop"      # sampled the stop token
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy (frozen: safe to share across requests).
+
+    ``temperature == 0`` is greedy; ``> 0`` samples from the Goldschmidt
+    softmax.  ``top_k == 0`` means full vocab; per-request values are
+    honored inside the fused tick (rows carry their own k).  ``stop``
+    ends generation early when that token id is sampled (it is included
+    in the output; finish_reason becomes "stop").
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    stop: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+    @property
+    def stochastic(self) -> bool:
+        return self.temperature > 0
+
 
 @dataclasses.dataclass
 class Request:
     """One generation request.
 
-    ``temperature == 0`` is greedy; ``> 0`` samples from the Goldschmidt
-    softmax (top-k is an engine-wide static knob, see ``EngineConfig``).
+    ``sampling`` carries the per-request sampling policy; the
+    ``temperature`` field is a deprecated shim (it seeds ``sampling``
+    when none is given, and mirrors ``sampling.temperature`` so old
+    call sites keep reading a consistent value).
     ``arrival_time`` is seconds from trace start — the engine admits the
     request only once its clock passes it (Poisson traces in serve.py).
     ``frames`` carries the precomputed encoder input for encdec archs.
@@ -33,9 +72,10 @@ class Request:
     rid: int
     prompt: np.ndarray  # (s,) int32 token ids
     max_new_tokens: int
-    temperature: float = 0.0
+    temperature: float = 0.0  # deprecated: use sampling=SamplingParams(...)
     arrival_time: float = 0.0
     frames: Optional[np.ndarray] = None
+    sampling: Optional[SamplingParams] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -44,6 +84,14 @@ class Request:
         if self.max_new_tokens < 1:
             raise ValueError(
                 f"request {self.rid}: max_new_tokens must be >= 1")
+        if self.sampling is None:
+            self.sampling = SamplingParams(temperature=self.temperature)
+        elif (self.temperature
+              and self.temperature != self.sampling.temperature):
+            raise ValueError(
+                f"request {self.rid}: both temperature= and sampling= "
+                "given and they disagree")
+        self.temperature = self.sampling.temperature
 
     @property
     def prompt_len(self) -> int:
@@ -70,7 +118,19 @@ class RequestState:
 
     @property
     def done(self) -> bool:
-        return len(self.tokens) >= self.request.max_new_tokens
+        if len(self.tokens) >= self.request.max_new_tokens:
+            return True
+        stop = self.request.sampling.stop
+        return (stop is not None and len(self.tokens) > 0
+                and self.tokens[-1] == stop)
+
+    @property
+    def finish_reason(self) -> str:
+        stop = self.request.sampling.stop
+        if (stop is not None and self.tokens and self.tokens[-1] == stop
+                and len(self.tokens) <= self.request.max_new_tokens):
+            return FINISH_STOP
+        return FINISH_LENGTH
 
     @property
     def ttft(self) -> float:
@@ -78,11 +138,69 @@ class RequestState:
 
 
 @dataclasses.dataclass
-class RequestOutput:
-    """What the engine hands back per request."""
+class GenerationResult:
+    """What the engine (and ``generate_sequential``) hands back per request.
+
+    ``__array__`` makes the result usable where the old bare token array
+    was expected (``np.array_equal(result, tokens)`` still holds) — a
+    transition shim, not the API; read ``.tokens``.
+    """
 
     rid: int
     prompt_len: int
-    tokens: np.ndarray  # (max_new_tokens,) int32, first token from prefill
+    tokens: np.ndarray  # (<= max_new_tokens,) int32, first from prefill
     ttft_s: float
     finish_s: float  # arrival -> last token, engine-clock seconds
+    finish_reason: str = FINISH_LENGTH
+    metrics: Optional[Any] = None  # ServeMetrics of the run (shared handle)
+
+    def __array__(self, dtype=None, copy=None):
+        arr = np.asarray(self.tokens)
+        return arr.astype(dtype) if dtype is not None else arr
+
+
+# Deprecated alias — the engine used to return RequestOutput; the shape
+# is a strict subset of GenerationResult.
+RequestOutput = GenerationResult
+
+
+class ServeResult:
+    """All results of one ``Engine.run``: mapping rid -> GenerationResult
+    plus the run's :class:`ServeMetrics`.
+
+    Legacy unpacking ``outs, metrics = engine.run(...)`` still works:
+    iteration yields exactly ``(results_dict, metrics)``.  New code reads
+    ``res[rid]`` / ``res.results`` / ``res.metrics``.
+    """
+
+    def __init__(self, results: Dict[int, GenerationResult], metrics: Any):
+        self.results = results
+        self.metrics = metrics
+
+    def __getitem__(self, rid: int) -> GenerationResult:
+        return self.results[rid]
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self.results
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def keys(self):
+        return self.results.keys()
+
+    def values(self):
+        return self.results.values()
+
+    def items(self):
+        return self.results.items()
+
+    def __iter__(self) -> Any:
+        # the legacy 2-tuple protocol, NOT key iteration: the engine
+        # returned (outputs, metrics) for two releases and every caller
+        # unpacks it.  Iterate .results / .items() for the mapping view.
+        return iter((self.results, self.metrics))
+
+    def __repr__(self) -> str:
+        return (f"ServeResult({len(self.results)} requests, "
+                f"metrics={self.metrics is not None})")

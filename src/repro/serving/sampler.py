@@ -11,7 +11,14 @@ epilogues.  Greedy takes argmax over those probabilities (the per-row
 reciprocal is a single positive factor, so the ordering is the logits'
 ordering); stochastic sampling inverts the CDF at a uniform draw.
 ``temperature`` may be a (b,) vector so greedy and sampling requests
-share one fused tick; ``top_k`` is static (it shapes the lowering).
+share one fused tick.  ``top_k`` is either a static int (one k for the
+whole batch — shapes the lowering) or a **(b,) vector of per-row k**
+paired with a static ``max_top_k`` bound: the lowering takes the top
+``max_top_k`` once and each row picks its own kth threshold, so requests
+with different ``SamplingParams.top_k`` share one fused tick.  A row
+with ``k == 0`` keeps the full vocab.  When every row carries the same
+k, the vector path masks exactly the same logits as the static path
+(same kth threshold), so the two are token-for-token interchangeable.
 
 ``key`` may be a single typed PRNG key (one draw broadcast over rows —
 the legacy tick-stream shape) or a **(b,) vector of typed keys**, one
@@ -28,6 +35,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import NumericsPolicy
 from repro.layers.attention import NEG_INF  # the shared masking constant
@@ -38,15 +46,26 @@ def sample_tokens(
     *,
     policy: NumericsPolicy,
     temperature=0.0,  # python float or (b,) array; 0 -> greedy per row
-    top_k: int = 0,   # static: 0 = full vocab
+    top_k=0,          # static int (0 = full vocab) or (b,) per-row array
+    max_top_k: Optional[int] = None,  # static bound, required w/ array top_k
     key: Optional[jax.Array] = None,  # single key or (b,) per-row keys;
     # required when any row samples
 ) -> jnp.ndarray:
     """Returns (b,) int32 token ids."""
     lf = logits.astype(jnp.float32)
-    if top_k:
-        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
-        lf = jnp.where(lf >= kth, lf, NEG_INF)  # ties at the kth value stay
+    if top_k is None or isinstance(top_k, (int, np.integer)):
+        if top_k:
+            kth = jax.lax.top_k(lf, int(top_k))[0][..., -1:]
+            lf = jnp.where(lf >= kth, lf, NEG_INF)  # kth-value ties stay
+    else:
+        if not max_top_k:
+            raise ValueError("array top_k needs a static max_top_k bound")
+        kvec = jnp.asarray(top_k, jnp.int32)
+        vals = jax.lax.top_k(lf, int(max_top_k))[0]  # (b, K) sorted desc
+        kth = jnp.take_along_axis(
+            vals, jnp.clip(kvec - 1, 0, int(max_top_k) - 1)[:, None], axis=1)
+        # same mask as the static path per row; k == 0 rows stay unmasked
+        lf = jnp.where((kvec[:, None] > 0) & (lf < kth), NEG_INF, lf)
 
     temp = jnp.asarray(temperature, jnp.float32)
     stochastic = key is not None

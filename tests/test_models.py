@@ -92,9 +92,10 @@ class TestDecodeConsistency:
             atol=tol, rtol=tol)
 
         # grow cache to max_seq and continue token by token
-        from repro.serving.cache import grow_cache
+        from repro.serving.cache import SlotCachePool
 
-        cache = grow_cache(cfg, states, b, cfg.max_seq, jnp.dtype(cfg.dtype))
+        cache = SlotCachePool.grow(cfg, states, b, cfg.max_seq,
+                                   jnp.dtype(cfg.dtype))
         for t in range(split, s):
             step_batch = {"token": batch["tokens"][:, t:t + 1]}
             if "pos_ids" in batch:

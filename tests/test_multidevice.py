@@ -179,7 +179,8 @@ class TestShardedServing:
                 api.make_cache(cfg, 2, e2.s_max, jnp.float32), pool_sh)
             args = (e2.params, cache, jnp.zeros(2, jnp.int32),
                     jnp.zeros((2, 1), jnp.int32), jnp.zeros(2, jnp.float32),
-                    jnp.zeros(2, jnp.int32), e2._key)
+                    jnp.zeros(2, jnp.int32), jnp.zeros(2, jnp.int32),
+                    e2._key)
             compiled = e2._tick_fn(False).lower(*args).compile()
             n = len(jax.tree.leaves(cache))
             flat_in = jax.tree.leaves(compiled.input_shardings[0])
@@ -205,6 +206,52 @@ class TestShardedServing:
         assert res["sharded_params"] > 0
         assert res["sharded_cache"] > 0
         assert res["no_reshard"], "decode tick resharded the cache"
+
+    def test_sharded_paged_pool_token_parity(self):
+        """The paged engine (block-table arena, prefix sharing on) over a
+        (2, 4) mesh must match the single-device slot-pool engine token
+        for token — the rank-5 k/v rule shards the page arena the same
+        way it shards slot rows (page axis in the slot position), and
+        the gathered block-table indexing must commute with the 'model'
+        head sharding."""
+        res = run_py("""
+            import json, jax, numpy as np
+            from repro import configs
+            from repro.models import api
+            from repro.launch.mesh import make_serving_mesh
+            from repro.serving import Engine, EngineConfig, Request
+
+            cfg = configs.get_smoke("tinyllama-1.1b", dtype="float32",
+                                    param_dtype="float32")
+            params = api.init(cfg, jax.random.key(3))
+            rng = np.random.RandomState(3)
+            shared = rng.randint(0, cfg.vocab, (8,))
+            reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, (5+i,)),
+                            max_new_tokens=4 + i) for i in range(3)]
+            # plus two sharers of one prompt: prefix reuse under TP
+            reqs += [Request(rid=10 + i, prompt=shared, max_new_tokens=4)
+                     for i in range(2)]
+
+            e1 = Engine(cfg, params, EngineConfig(n_slots=2))
+            o1, _ = e1.run(reqs)
+            e2 = Engine(cfg, params,
+                        EngineConfig(n_slots=2, pool="paged", page_size=4),
+                        mesh=make_serving_mesh("2x4"))
+            o2, m2 = e2.run(reqs)
+            parity = all(np.array_equal(o1[r.rid].tokens, o2[r.rid].tokens)
+                         for r in reqs)
+            sharded_arena = sum(
+                s.spec != jax.sharding.PartitionSpec()
+                for s in jax.tree.leaves(e2._cache_sh))
+            print(json.dumps({"parity": parity,
+                              "skips": m2.prefill_skips,
+                              "pool": m2.pool["kind"],
+                              "sharded_arena": sharded_arena}))
+        """)
+        assert res["parity"], "sharded paged vs single-device slot mismatch"
+        assert res["pool"] == "paged"
+        assert res["skips"] >= 1, "prefix reuse inactive under TP"
+        assert res["sharded_arena"] > 0, "page arena silently replicated"
 
     def test_sharded_serving_stochastic_streams_match(self):
         """Temperature/top-k sampling through the sharded tick: the

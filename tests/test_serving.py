@@ -17,7 +17,8 @@ import pytest
 from repro import configs
 from repro.core.policy import EXACT, GS_FEEDBACK
 from repro.models import api
-from repro.serving import (Engine, EngineConfig, Request, SlotCachePool,
+from repro.serving import (Engine, EngineConfig, PagedCachePool, Request,
+                           SamplingParams, SlotCachePool,
                            generate_sequential, sample_tokens)
 
 F32 = dict(dtype="float32", param_dtype="float32")
@@ -261,14 +262,25 @@ class TestSlotCachePool:
             assert bool(jnp.all(leaf == 0))
 
     def test_graft_rejects_oversize(self):
-        from repro.serving.cache import grow_cache
-
         cfg, _ = self._pool()
         b = {"tokens": jnp.zeros((1, 24), jnp.int32)}
         params = api.init(cfg, jax.random.key(7))
         _, states, _ = api.prefill(cfg, params, b)
         with pytest.raises(ValueError):
-            grow_cache(cfg, states, 1, 16, jnp.float32)  # 24 > 16
+            SlotCachePool.grow(cfg, states, 1, 16, jnp.float32)  # 24 > 16
+
+    def test_grow_cache_deprecated_shim(self):
+        from repro.serving.cache import grow_cache
+
+        cfg, _ = self._pool()
+        b = {"tokens": jnp.zeros((1, 5), jnp.int32)}
+        params = api.init(cfg, jax.random.key(7))
+        _, states, _ = api.prefill(cfg, params, b)
+        with pytest.warns(DeprecationWarning):
+            grown = grow_cache(cfg, states, 1, 16, jnp.float32)
+        ref = SlotCachePool.grow(cfg, states, 1, 16, jnp.float32)
+        for a, b_ in zip(jax.tree.leaves(grown), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
 
 
 class TestSampler:
@@ -359,6 +371,344 @@ class TestVectorCurIndex:
                                           np.asarray(k1))
             np.testing.assert_array_equal(np.asarray(v2[i:i + 1]),
                                           np.asarray(v1))
+
+
+def _paged_cfg(n_slots=2, s_max=22, page_size=4, n_pages=0, prefix="exact"):
+    return EngineConfig(n_slots=n_slots, s_max=s_max, pool="paged",
+                        page_size=page_size, n_pages=n_pages, prefix=prefix)
+
+
+class TestPagedServing:
+    """Paged-vs-slot (and vs sequential) token-for-token greedy parity,
+    prefix sharing, and page accounting through the full engine."""
+
+    def test_paged_matches_slot_pool_and_sequential(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(20))
+        rng = np.random.RandomState(20)
+        reqs = _requests(cfg, rng, [(6, 5, 0.0), (9, 8, 0.0),
+                                    (4, 3, 0.02), (7, 6, 0.03)])
+        outs_s, _ = Engine(cfg, params, EngineConfig(
+            n_slots=2, s_max=22)).run(reqs)
+        outs_p, m_p = Engine(cfg, params, _paged_cfg()).run(reqs)
+        _assert_parity(cfg, params, reqs, outs_p)
+        for r in reqs:
+            np.testing.assert_array_equal(outs_s[r.rid].tokens,
+                                          outs_p[r.rid].tokens)
+        assert m_p.pool["kind"] == "paged"
+        assert m_p.pool["pages_in_use"] >= 0
+
+    def test_paged_single_slot_recycling_no_page_leak(self):
+        """n_slots=1 churns every request through the same slot; with
+        prefix sharing off, every page must return to the free list and
+        refcounts must drop to zero (a leak here starves admission)."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(21))
+        rng = np.random.RandomState(21)
+        reqs = _requests(cfg, rng, [(8, 4, 0.0), (5, 6, 0.0),
+                                    (10, 3, 0.0), (6, 5, 0.0)])
+        eng = Engine(cfg, params, _paged_cfg(n_slots=1, prefix="off"))
+        outs, metrics = eng.run(reqs)
+        _assert_parity(cfg, params, reqs, outs)
+        pool = metrics.pool
+        assert pool["pages_in_use"] == 0           # all pages returned
+        assert pool["peak_pages_in_use"] > 0       # ...after real use
+        assert pool["prefix_entries"] == 0
+
+    def test_paged_tight_arena_throttles_admission(self):
+        """An arena sized for ~one request at a time must still serve
+        the whole trace correctly (page-budget admission + eviction)."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(22))
+        rng = np.random.RandomState(22)
+        reqs = _requests(cfg, rng, [(9, 8, 0.0), (10, 7, 0.0),
+                                    (8, 9, 0.0)])
+        # pages_per_slot = ceil(22/4) = 6 -> minimum legal arena is 7
+        eng = Engine(cfg, params, _paged_cfg(n_slots=3, n_pages=7))
+        outs, _ = eng.run(reqs)
+        _assert_parity(cfg, params, reqs, outs)
+
+    def test_shared_prompt_prefills_once_across_8_requests(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(23))
+        rng = np.random.RandomState(23)
+        prompt = rng.randint(0, cfg.vocab, (6,))
+        reqs = [Request(rid=i, prompt=prompt, max_new_tokens=5)
+                for i in range(8)]
+        eng = Engine(cfg, params, _paged_cfg(n_slots=4))
+        outs, metrics = eng.run(reqs)
+        assert metrics.prefill_skips == 7      # prefilled exactly once
+        assert metrics.prefill_tokens == 6
+        assert metrics.prefix_hits == 7
+        assert metrics.prefix_hit_tokens == 7 * 6
+        _assert_parity(cfg, params, reqs, outs)  # sharing is bit-exact
+
+    def test_prefix_off_disables_sharing(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(23))
+        rng = np.random.RandomState(23)
+        prompt = rng.randint(0, cfg.vocab, (6,))
+        reqs = [Request(rid=i, prompt=prompt, max_new_tokens=3)
+                for i in range(4)]
+        _, metrics = Engine(cfg, params,
+                            _paged_cfg(n_slots=2, prefix="off")).run(reqs)
+        assert metrics.prefill_skips == 0
+        assert metrics.prefill_tokens == 4 * 6
+
+    def test_pages_mode_partial_prefix_same_length_parity(self):
+        """share='pages': page-aligned partial sharing between SAME
+        length prompts is bit-exact (chunked prefill partitions equal
+        lengths identically); the sharer must not rewrite shared pages."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(24))
+        rng = np.random.RandomState(24)
+        head = rng.randint(0, cfg.vocab, (8,))  # two full 4-token pages
+        tails = [rng.randint(0, cfg.vocab, (3,)) for _ in range(2)]
+        reqs = [Request(rid=i, prompt=np.concatenate([head, t]),
+                        max_new_tokens=4) for i, t in enumerate(tails)]
+        eng = Engine(cfg, params, _paged_cfg(n_slots=2, prefix="pages"))
+        outs, metrics = eng.run(reqs)
+        _assert_parity(cfg, params, reqs, outs)
+        assert metrics.prefix_hits == 1           # second shares 2 pages
+        assert metrics.prefix_hit_tokens == 8
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("arch,over", [
+        ("falcon-mamba-7b", {}),
+        ("jamba-1.5-large-398b", {"capacity_factor": 8.0}),
+        ("qwen2-vl-72b", {}),
+        ("whisper-large-v3", {}),
+    ])
+    def test_paged_families_parity(self, arch, over):
+        """SSM (slot-resident states), hybrid, mrope VLM and encdec
+        (cross-KV stays slot-indexed) through the paged decode path."""
+        cfg = configs.get_smoke(arch, **F32, **over)
+        params = api.init(cfg, jax.random.key(25))
+        rng = np.random.RandomState(25)
+        reqs = _requests(cfg, rng, [(4, 3, 0.0), (7, 5, 0.0), (10, 4, 0.0)])
+        outs, _ = Engine(cfg, params, _paged_cfg()).run(reqs)
+        _assert_parity(cfg, params, reqs, outs)
+
+    def test_paged_stochastic_matches_sequential(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(26))
+        rng = np.random.RandomState(26)
+        reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, (s,)),
+                        max_new_tokens=g,
+                        sampling=SamplingParams(temperature=t, top_k=k))
+                for i, (s, g, t, k) in enumerate([
+                    (6, 5, 0.9, 8), (9, 6, 0.0, 0), (4, 5, 1.2, 3)])]
+        eng = Engine(cfg, params, dataclasses.replace(_paged_cfg(), seed=3))
+        outs, _ = eng.run(reqs)
+        for r in reqs:
+            ref = generate_sequential(cfg, params, r, seed=3)
+            np.testing.assert_array_equal(np.asarray(ref),
+                                          outs[r.rid].tokens)
+
+    def test_impossible_request_rejected_not_hung(self):
+        """A request that can never fit the arena must be rejected up
+        front (and the admission loop has a deadlock guard behind it),
+        never spun forever."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(27))
+        # needs ceil((10+9-1)/4) = 5 pages > the 3 usable in a 4-page arena
+        with pytest.raises(ValueError):
+            Engine(cfg, params,
+                   _paged_cfg(n_slots=1, n_pages=4)).run(
+                [Request(rid=0, prompt=np.zeros(10, np.int32),
+                         max_new_tokens=9)])
+
+
+class TestPagedCachePool:
+    """Host-side page accounting: refcounts, COW, eviction, trash page."""
+
+    def _pool(self, **kw):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        kw.setdefault("page_size", 4)
+        kw.setdefault("n_slots", 2)
+        kw.setdefault("n_pages", 0)
+        n_slots = kw.pop("n_slots")
+        return cfg, PagedCachePool(cfg, n_slots, 16, jnp.float32, **kw)
+
+    def _write(self, cfg, pool, slot, req):
+        params = getattr(self, "_params", None)
+        if params is None:
+            params = self._params = api.init(cfg, jax.random.key(30))
+        from repro.serving import prefill_batch
+
+        logits, states, _ = api.prefill(cfg, params, prefill_batch(cfg, req))
+        pool.write(int(slot), states, req=req, logits=logits)
+
+    def test_alloc_reserves_whole_budget_and_free_returns_it(self):
+        cfg, pool = self._pool()
+        req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                      max_new_tokens=6)  # 10 positions -> 3 pages
+        before = pool.pages_in_use
+        slot = pool.alloc(req)
+        assert pool.pages_in_use == before + 3
+        assert all(pool.ref[p] == 1 for p in pool._slot_pages[int(slot)])
+        self._write(cfg, pool, int(slot), req)
+        pool.free(int(slot))
+        # the prefix entry registered at write keeps the 2 prompt pages
+        assert pool.pages_in_use == 2
+        pool.clear_prefix()
+        assert pool.pages_in_use == 0
+        assert int(pool.ref.sum()) == 1  # only the pinned trash page
+
+    def test_trash_page_never_freed_and_freed_rows_point_at_it(self):
+        cfg, pool = self._pool()
+        req = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                      max_new_tokens=2)
+        slot = pool.alloc(req)
+        assert 0 not in pool._slot_pages[int(slot)]
+        self._write(cfg, pool, int(slot), req)
+        pool.free(int(slot))
+        assert (pool.table[int(slot)] == 0).all()
+        assert pool.ref[0] == 1
+
+    def test_exact_hit_skips_prefill_and_cow_copies_tail(self):
+        cfg, pool = self._pool(n_slots=2)
+        req = Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                      max_new_tokens=4)
+        s0 = pool.alloc(req)
+        assert not s0.hit.skip_prefill
+        self._write(cfg, pool, int(s0), req)
+        req2 = Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                       max_new_tokens=4)
+        s1 = pool.alloc(req2)
+        assert s1.hit.skip_prefill
+        assert pool.cow_copies == 1  # boundary page copied for writing
+        # full prompt page is shared, tail is private
+        assert pool.table[int(s1), 0] == pool.table[int(s0), 0]
+        assert pool.table[int(s1), 1] != pool.table[int(s0), 1]
+
+    def test_read_only_sharer_attaches_tail_without_cow(self):
+        cfg, pool = self._pool(n_slots=2)
+        req = Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                      max_new_tokens=4)
+        s0 = pool.alloc(req)
+        self._write(cfg, pool, int(s0), req)
+        req2 = Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                       max_new_tokens=1)  # never writes -> no COW needed
+        s1 = pool.alloc(req2)
+        assert s1.hit.skip_prefill and pool.cow_copies == 0
+        assert pool.table[int(s1), 1] == pool.table[int(s0), 1]
+
+    def test_eviction_frees_cold_entries_but_never_slot_pages(self):
+        cfg, pool = self._pool(n_slots=1, n_pages=7)
+        # fill the index with two dead entries (slot freed, entry kept)
+        for rid, ln in ((0, 5), (1, 9)):
+            req = Request(rid=rid,
+                          prompt=np.full(ln, rid, np.int32),
+                          max_new_tokens=2)
+            s = pool.alloc(req)
+            self._write(cfg, pool, int(s), req)
+            pool.free(int(s))
+        assert len(pool._index) == 2 and pool.pages_in_use > 0
+        # a big request forces eviction of the LRU entries
+        big = Request(rid=2, prompt=np.arange(12, dtype=np.int32),
+                      max_new_tokens=5)
+        assert pool.can_admit(big)
+        s = pool.alloc(big)
+        assert pool.evictions > 0
+        assert len(pool._slot_pages[int(s)]) == 4  # ceil(16/4)
+
+    def test_can_admit_accounts_for_page_budget(self):
+        cfg, pool = self._pool(n_slots=2, n_pages=7, share="off")
+        r0 = Request(rid=0, prompt=np.arange(9, dtype=np.int32),
+                     max_new_tokens=8)   # 16 positions -> 4 pages
+        assert pool.can_admit(r0)
+        s0 = pool.alloc(r0)
+        r1 = Request(rid=1, prompt=np.arange(9, dtype=np.int32),
+                     max_new_tokens=8)
+        assert not pool.can_admit(r1)    # 4 more pages > 2 free
+        self._write(cfg, pool, int(s0), r0)
+        pool.free(int(s0))
+        assert pool.can_admit(r1)
+
+    def test_alloc_requires_request(self):
+        _, pool = self._pool()
+        with pytest.raises(ValueError):
+            pool.alloc()
+
+    def test_row_gathers_dense_view(self):
+        cfg, pool = self._pool()
+        req = Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                      max_new_tokens=2)
+        s = pool.alloc(req)
+        self._write(cfg, pool, int(s), req)
+        row = pool.row(int(s))
+        for leaf in jax.tree.leaves(row):
+            assert leaf.shape[1] == 16  # s_max-length dense view
+
+
+class TestSamplingParamsAPI:
+    def test_temperature_kwarg_shim_populates_sampling(self):
+        r = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                    temperature=0.7)
+        assert r.sampling.temperature == 0.7
+        assert r.sampling.stochastic
+
+    def test_conflicting_kwarg_and_sampling_rejected(self):
+        with pytest.raises(ValueError):
+            Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                    temperature=0.7,
+                    sampling=SamplingParams(temperature=0.2))
+
+    def test_sampling_params_validate(self):
+        with pytest.raises(ValueError):
+            SamplingParams(temperature=-1.0)
+        with pytest.raises(ValueError):
+            SamplingParams(top_k=-2)
+
+    def test_stop_token_sets_finish_reason(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(31))
+        rng = np.random.RandomState(31)
+        prompt = rng.randint(0, cfg.vocab, (6,))
+        free = generate_sequential(
+            cfg, params, Request(rid=0, prompt=prompt, max_new_tokens=6))
+        assert free.finish_reason == "length"
+        stop = int(np.asarray(free)[1])
+        req = Request(rid=0, prompt=prompt, max_new_tokens=6,
+                      sampling=SamplingParams(stop=stop))
+        outs, _ = Engine(cfg, params, EngineConfig(n_slots=1)).run([req])
+        got = outs[0]
+        assert got.finish_reason == "stop"
+        assert got.tokens[-1] == stop
+        assert len(got.tokens) < 6
+        seq = generate_sequential(cfg, params, req)
+        assert seq.finish_reason == "stop"
+        np.testing.assert_array_equal(seq.tokens, got.tokens)
+
+    def test_serve_result_unpacks_and_maps(self):
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(32))
+        reqs = [Request(rid=5, prompt=np.zeros(4, np.int32),
+                        max_new_tokens=2)]
+        res = Engine(cfg, params, EngineConfig(n_slots=1)).run(reqs)
+        outs, metrics = res                      # legacy 2-tuple protocol
+        assert 5 in outs and metrics.n_requests == 1
+        assert res[5].tokens.shape == (2,)       # mapping protocol
+        assert sorted(res.keys()) == [5]
+        assert res[5].finish_reason == "length"
+
+    def test_per_request_top_k_mixes_in_one_tick(self):
+        """Rows with different top_k in the same fused tick must each
+        match their own sequential reference (per-row kth threshold)."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(33))
+        rng = np.random.RandomState(33)
+        reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, (s,)),
+                        max_new_tokens=5,
+                        sampling=SamplingParams(temperature=0.9, top_k=k))
+                for i, (s, k) in enumerate([(6, 2), (8, 0), (5, 9)])]
+        eng = Engine(cfg, params, EngineConfig(n_slots=3, seed=5))
+        outs, _ = eng.run(reqs)
+        for r in reqs:
+            ref = generate_sequential(cfg, params, r, seed=5)
+            np.testing.assert_array_equal(np.asarray(ref),
+                                          outs[r.rid].tokens)
 
 
 class TestRequestValidation:

@@ -82,3 +82,20 @@ class TestLaunchers:
         )
         assert out.returncode == 0, out.stderr[-3000:]
         assert "tok/s" in out.stdout
+
+    def test_serve_cli_paged_prefix_sharing(self):
+        """--pool paged on identical prompts: the report must show the
+        page-arena stats line with the prompt prefilled once (batch-1
+        prefills skipped via exact prefix hits)."""
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch",
+             "tinyllama-1.1b", "--smoke", "--batch", "3",
+             "--prompt-len", "8", "--gen", "6",
+             "--pool", "paged", "--page-size", "4"],
+            capture_output=True, text=True, timeout=900,
+            env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        )
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "tok/s" in out.stdout
+        assert "pages:" in out.stdout
+        assert "2 prefills skipped" in out.stdout
