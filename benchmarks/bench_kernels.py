@@ -239,10 +239,98 @@ def _flash_chunked_gs(q, k, v):
                            causal=True, q_block=64, kv_block=64))
 
 
+# ---------------------------------------------------------------------------
+# fixed-point int8 rows: the quantized serving datapath's kernel claim
+# ---------------------------------------------------------------------------
+
+# Each int8 row is gated by its OWN NumericFormat certification (measured
+# against the bit-exact reference datapath, never assumed) x2 — the fused
+# kernels add an int8 msb-normalize + IEEE exponent unfold around the
+# certified divide, worth at most one certification step of slack.
+FIXED_MARGIN = 2.0
+
+
+def _fixed_formats():
+    """The swept formats: the resolved int8 default (frac24 -> seed-only
+    (8, 0)), a wide-register variant, and a Mitchell log-mult format
+    (approximate first pass, counter rebudgeted)."""
+    from repro.core import formats
+
+    return (
+        ("frac24", formats.format_for("int8")),
+        ("frac30", formats.NumericFormat.fixed(30)),
+        ("mitchell", formats.NumericFormat.fixed(24, p=7, mitchell_iters=1)),
+    )
+
+
+def _fixed_cases(smoke: bool):
+    r = np.random.RandomState(7)
+    rows_n = 64 if smoke else 256
+    x = r.randint(-127, 128, (rows_n, 128)).astype(np.int8)
+    x[x == 0] = 1
+    scale = 0.02
+    gain = r.randn(128).astype(np.float32)
+    xf = x.astype(np.float64) * scale
+
+    recip_want = 1.0 / xf
+
+    def recip_err(got):
+        return float(np.max(np.abs(np.asarray(got) - recip_want)
+                            / np.abs(recip_want)))
+
+    e = np.exp(xf - xf.max(-1, keepdims=True))
+    sm_want = e / e.sum(-1, keepdims=True)
+
+    def softmax_err(got):
+        return float(np.max(np.abs(np.asarray(got) - sm_want)))
+
+    ms = np.mean(xf * xf, axis=-1, keepdims=True) + 1e-6
+    rn_want = xf / np.sqrt(ms) * gain
+
+    def rmsnorm_err(got):
+        return float(np.max(np.abs(np.asarray(got) - rn_want))
+                     / np.max(np.abs(rn_want)))
+
+    xj, gj = jnp.asarray(x), jnp.asarray(gain)
+    return [
+        ("gs_fixed_recip",
+         lambda **c: ops.gs_fixed_recip(xj, scale, **c), recip_err),
+        ("gs_fixed_softmax",
+         lambda **c: ops.gs_fixed_softmax(xj, scale, **c), softmax_err),
+        ("gs_fixed_rmsnorm",
+         lambda **c: ops.gs_fixed_rmsnorm(xj, scale, gj, **c), rmsnorm_err),
+    ]
+
+
+def fixed_records(smoke: bool = False):
+    """int8 rows for BENCH_kernels.json: the fused fixed-point GS kernels
+    on int8 operands, per swept NumericFormat, errors vs a float64 oracle
+    (recip/rmsnorm relative, softmax absolute)."""
+    from repro.core import formats
+
+    repeats = 1 if smoke else 3
+    cases = _fixed_cases(smoke)
+    out = []
+    for fmt_name, fmt in _fixed_formats():
+        cfg = fmt.precision()
+        bound = FIXED_MARGIN * fmt.error_bound()
+        for kernel, fn, err_fn in cases:
+            err = err_fn(fn(**cfg))
+            us = _time(lambda: fn(**cfg), repeats=repeats)
+            out.append({
+                "kernel": kernel, "dtype": "int8", "impl": "pallas",
+                "policy": fmt_name, "config": cfg,
+                "us_per_call": round(us, 1), "max_err": err,
+                "err_bound": bound, "ok": bool(err <= bound),
+                "target_bits": formats.INT8_TARGET_BITS,
+            })
+    return out
+
+
 def records(smoke: bool = False):
     """The BENCH_kernels.json rows: every kernel at fp32 and bf16, pallas
     and jnp impls, under the fixed seed literals (p=7, iters=2) and the
-    dtype-derived precision policy."""
+    dtype-derived precision policy — plus the int8 fixed-point rows."""
     repeats = 1 if smoke else 3
     out = []
     for kernel, args_np, pallas_fn, jnp_fn, err_fn in _bench_cases(smoke):
@@ -285,6 +373,7 @@ def records(smoke: bool = False):
                 "err_bound": bound, "ok": bool(err <= bound),
                 "target_bits": target_bits_for(dtype),
             })
+    out.extend(fixed_records(smoke))
     return out
 
 

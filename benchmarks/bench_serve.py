@@ -38,10 +38,18 @@ single-request runs.  Writes ``BENCH_serve.json``:
   the gate asserts the prompt was prefilled exactly once (7 exact
   prefix hits skip prefill entirely) and that every sharer's tokens
   still match the unshared sequential reference
+* ``quant`` — the trace served again under ``ArchConfig.quant="int8"``
+  through BOTH pools (weight-only int8 params, int8 KV arenas,
+  fixed-point GS epilogues): metrics per pool, int8-vs-fp32 param bytes,
+  ``bytes_ratio_vs_bf16`` (int8 params + int8 slot cache over the
+  analytic bf16 baseline, gated <= 0.55), ``matched_frac_vs_fp32``
+  (aggregate matched token prefix vs the fp32 sequential references,
+  gated >= 0.75) and slot/paged int8 token parity
 * ``checks``      — the CI gate: parity vs sequential (slot AND paged),
   continuous ticks not above static ticks (with slack), continuous
-  occupancy not below static (with slack), the paged byte budget, and
-  prefill-once prefix sharing
+  occupancy not below static (with slack), the paged byte budget,
+  prefill-once prefix sharing, and the quant-leg byte/divergence/parity
+  gates
 
 Ticks are the robust comparison: every decode tick costs one full-pool
 step, so fewer ticks for the same useful tokens IS the throughput win;
@@ -64,6 +72,8 @@ import numpy as np
 
 OCCUPANCY_SLACK = 0.05  # continuous may trail static by at most this
 TICK_SLACK = 1.25       # wall-clock admission jitter allowance
+QUANT_BYTES_BUDGET = 0.55       # int8 params+cache vs the analytic bf16 pair
+QUANT_DIVERGENCE_BUDGET = 0.25  # int8-vs-fp32 greedy token drift allowance
 
 
 def build_trace(cfg, n_requests: int, prompt_hi: int, gen_hi: int,
@@ -173,6 +183,58 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
         np.array_equal(prefix_ref, prefix_outs[r.rid].tokens)
         for r in shared_reqs)
 
+    # quant leg: the same trace under ArchConfig.quant="int8" — weight-only
+    # int8 params (transient in-step dequant), static-scale int8 KV arenas,
+    # fixed-point GS epilogues.  Two gates:
+    #   * bytes — int8 params + int8 slot cache <= QUANT_BYTES_BUDGET x the
+    #     ANALYTIC bf16 baseline (fp32 measured bytes halved: the serving
+    #     dtype a non-quantized deployment would actually run)
+    #   * divergence — greedy int8 streams may drift from the fp32
+    #     sequential references once quantization error flips a near-tie,
+    #     but the matched prefix must cover >= 1 - QUANT_DIVERGENCE_BUDGET
+    #     of the reference tokens in aggregate, and slot/paged int8 must
+    #     agree token-for-token (same datapath, pool-invariant)
+    import dataclasses
+
+    from repro.layers.quant import tree_bytes
+
+    cfg_q = dataclasses.replace(cfg, quant="int8")
+    quant_legs = {}
+    for pool_name, ecfg in (
+            ("slot", EngineConfig(n_slots=n_slots, s_max=engine.s_max)),
+            ("paged", EngineConfig(n_slots=n_slots, s_max=engine.s_max,
+                                   pool="paged", page_size=page_size,
+                                   n_pages=n_pages))):
+        q_engine = Engine(cfg_q, params, ecfg, mesh=mesh)
+        q_engine.warmup(sorted({r.prompt_len for r in reqs}))
+        q_outs, q_m = q_engine.run(reqs)
+        quant_legs[pool_name] = (q_engine, q_outs, q_m)
+
+    def _matched_prefix(ref, got):
+        n = min(len(ref), len(got))
+        for i in range(n):
+            if ref[i] != got[i]:
+                return i
+        return n
+
+    q_slot_outs, q_slot_m = quant_legs["slot"][1], quant_legs["slot"][2]
+    q_paged_outs, q_paged_m = quant_legs["paged"][1], quant_legs["paged"][2]
+    ref_total = sum(len(refs[r.rid].tokens) for r in reqs)
+    matched = sum(_matched_prefix(refs[r.rid].tokens,
+                                  q_slot_outs[r.rid].tokens)
+                  for r in reqs)
+    quant_matched_frac = matched / max(ref_total, 1)
+    quant_pool_parity_ok = all(
+        np.array_equal(q_slot_outs[r.rid].tokens, q_paged_outs[r.rid].tokens)
+        for r in reqs)
+
+    fp32_param_bytes = tree_bytes(params)
+    bf16_baseline = (fp32_param_bytes
+                     + cont_m.pool["cache_bytes"]) / 2.0
+    quant_bytes = (tree_bytes(quant_legs["slot"][0].params)
+                   + q_slot_m.pool["cache_bytes"])
+    quant_bytes_ratio = quant_bytes / max(bf16_baseline, 1.0)
+
     # scheduler-independent costs, pooled across both runs (see docstring)
     pooled_tick_s = ((cont_m.decode_time_s + static_m.decode_time_s)
                      / max(cont_m.decode_ticks + static_m.decode_ticks, 1))
@@ -195,6 +257,10 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
         "prefix_prefill_once": (prefix_m.prefill_skips == 7
                                 and prefix_m.prefill_tokens == shared_len
                                 and prefix_m.prefix_hits >= 7),
+        "quant_bytes_ok": quant_bytes_ratio <= QUANT_BYTES_BUDGET,
+        "quant_divergence_ok": (quant_matched_frac
+                                >= 1.0 - QUANT_DIVERGENCE_BUDGET),
+        "quant_pool_parity_ok": quant_pool_parity_ok,
     }
     rec = {
         "smoke": smoke,
@@ -213,6 +279,15 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
         "page_size": page_size,
         "n_pages": n_pages,
         "paged_bytes_ratio": paged_bytes_ratio,
+        "quant": {
+            "slot": q_slot_m.to_dict(),
+            "paged": q_paged_m.to_dict(),
+            "param_bytes_fp32": int(fp32_param_bytes),
+            "param_bytes_int8": int(tree_bytes(quant_legs["slot"][0].params)),
+            "bytes_ratio_vs_bf16": quant_bytes_ratio,
+            "matched_frac_vs_fp32": quant_matched_frac,
+            "pool_parity": quant_pool_parity_ok,
+        },
         "tick_speedup": static_m.decode_ticks / max(cont_m.decode_ticks, 1),
         "tok_s_speedup": (cont_m.aggregate_tok_per_s
                           / max(static_m.aggregate_tok_per_s, 1e-9)),

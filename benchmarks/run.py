@@ -101,6 +101,13 @@ def main() -> None:
               f"{px['prefill_skips']} prefills skipped, "
               f"{px['prefix_hit_tokens']} prompt tokens shared, "
               f"prefill_tokens {px['prefill_tokens']}\"")
+        qt = rec["quant"]
+        qm = qt["slot"]
+        print(f"serve_quant,{qm['decode_time_s'] * 1e6 / max(qm['decode_ticks'], 1):.1f},"
+              f"\"int8 params x{qt['param_bytes_int8'] / max(qt['param_bytes_fp32'], 1):.3f} vs fp32, "
+              f"bytes x{qt['bytes_ratio_vs_bf16']:.3f} vs bf16, "
+              f"matched {qt['matched_frac_vs_fp32']:.2f} vs fp32 ref, "
+              f"pools agree={qt['pool_parity']}\"")
         print(f"# wrote {args.json or DEFAULT_SERVE_JSON}", file=sys.stderr)
         if args.check and not rec["ok"]:
             for name, ok in rec["checks"].items():

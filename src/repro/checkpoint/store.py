@@ -47,8 +47,19 @@ _MANIFEST = "manifest.json"
 _NATIVE_KINDS = set("fiub?c")
 
 
+def _npy_native(dt: np.dtype) -> bool:
+    # kind alone is not enough: ml_dtypes float8_e5m2 reports kind 'f'
+    # but its '<f1' descr is not a dtype numpy's .npy header can express
+    if dt.kind not in _NATIVE_KINDS:
+        return False
+    try:
+        return np.dtype(dt.str) == dt
+    except TypeError:
+        return False
+
+
 def _to_storable(arr: np.ndarray):
-    if arr.dtype.kind in _NATIVE_KINDS:
+    if _npy_native(arr.dtype):
         return arr, str(arr.dtype), False
     return arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,)), \
         str(arr.dtype), True

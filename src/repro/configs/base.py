@@ -72,6 +72,9 @@ class ArchConfig:
     gs_p_bits: Optional[int] = None  # None -> derived (seed/iteration trade)
     gs_iters: Optional[int] = None  # None -> derived from dtype
     kernel_impl: str = "jnp"  # jnp | pallas (pallas only on real TPU)
+    quant: str = "none"  # none | int8: per-tensor int8 weights + int8 KV
+    # arena + every GS division site through the fixed-point integer
+    # datapath (core/fixed_point_jax) — the quantized serving route
 
     # structure / performance knobs
     remat: bool = True
@@ -158,9 +161,16 @@ class ArchConfig:
         ``target_bits`` for that dtype, not for the fp32 intermediates
         (bf16 models stop paying fp32-grade iteration counts).
         """
+        fmt = None
+        if self.quant != "none":
+            if self.quant != "int8":
+                raise ValueError(f"unknown quant mode {self.quant!r}")
+            from repro.core.formats import format_for
+
+            fmt = format_for("int8")
         return NumericsPolicy(
             mode=self.policy_mode, p_bits=self.gs_p_bits, iters=self.gs_iters,
-            target_bits=target_bits_for(self.dtype),
+            target_bits=target_bits_for(self.dtype), fmt=fmt,
         )
 
     def optimizer_policy(self) -> NumericsPolicy:

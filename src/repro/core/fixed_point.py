@@ -16,13 +16,23 @@ bit level with numpy ``uint64`` integer arithmetic:
 * operands narrower than the multiplier width are zero-extended (the
   paper's "sensing it and adding leading zeros") — implicit in the fixed
   register width,
-* the ROM is the integer table from :mod:`repro.core.lut`.
+* the ROM is the integer table from :mod:`repro.core.lut`,
+* optionally, the first ``mitchell_iters`` Goldschmidt passes replace the
+  full multiplier with a **Mitchell log-multiplier** (leading-one detect +
+  linear log/antilog approximation, the FPGA companion arXiv:2508.14611's
+  cheap-early-iteration trick).  Mitchell always *underestimates* (since
+  ``2^f ≥ 1+f``) with max relative error ``1 − (1+f)/2^f ≈ 0.0830`` per
+  multiply; Goldschmidt is not self-correcting, so the certified accuracy
+  of a Mitchell format is *measured*, never assumed
+  (:func:`repro.core.formats.fixed_bits`).
 
 Both datapath variants are emulated; because the feedback design performs
 the *same multiplications in the same order* on the *same multiplier
 width*, its outputs are **bit-identical** to the pipelined design — that is
 the paper's "same accuracy" claim and it is asserted exactly in
-``tests/test_fixed_point.py``.
+``tests/test_fixed_point.py``.  The traceable jax port
+(:mod:`repro.core.fixed_point_jax`) is asserted bit-identical to this
+module in ``tests/test_fixed_point_jax.py``.
 """
 
 from __future__ import annotations
@@ -34,7 +44,24 @@ import numpy as np
 
 from repro.core import lut
 
-__all__ = ["FixedPointDatapath", "FixedResult"]
+__all__ = ["FixedPointDatapath", "FixedResult", "msb"]
+
+
+def msb(x: np.ndarray) -> np.ndarray:
+    """Vectorized leading-one index (floor(log2 x)) of registers < 2^32.
+
+    Binary-search shift cascade — exactly the comparator tree a hardware
+    leading-one detector is, and the construction the jax port mirrors
+    step-for-step (so both sides truncate identically everywhere).
+    """
+    x = x.astype(np.uint64)
+    e = np.zeros_like(x)
+    t = x.copy()
+    for sh in (16, 8, 4, 2, 1):
+        m = t >= (np.uint64(1) << np.uint64(sh))
+        e = np.where(m, e + np.uint64(sh), e)
+        t = np.where(m, t >> np.uint64(sh), t)
+    return e
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,15 +83,25 @@ class FixedPointDatapath:
       p: ROM index width (p bits in, p+2 bits out).
       frac_bits: fraction bits of every register / the multiplier width.
         Must leave headroom for the 2.0 integer bit: values < 4.0.
-        frac_bits ≤ 30 keeps products within uint64 exactly.
+        frac_bits ≤ 30 keeps products within uint64 exactly (and every
+        register within 32 bits, which the jax port relies on).
+      mitchell_iters: the first this-many Goldschmidt passes run their
+        MULT X/MULT Y through the Mitchell log-multiplier instead of the
+        full array multiplier (the ROM-seed MULT 1/2 stay exact — the
+        seed stage is already the cheap part).
     """
 
     p: int = 7
     frac_bits: int = 28
+    mitchell_iters: int = 0
 
     def __post_init__(self):
         if self.frac_bits > 30:
             raise ValueError("frac_bits > 30 overflows the uint64 product")
+        if self.frac_bits < self.p + 2:
+            raise ValueError(
+                f"frac_bits={self.frac_bits} cannot hold the (p+2)-bit ROM "
+                f"word (p={self.p})")
 
     # -- hardware primitive blocks ------------------------------------------
 
@@ -83,6 +120,35 @@ class FixedPointDatapath:
             self.frac_bits
         )
 
+    def mitchell_mult(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Mitchell log-multiplier: LOD + linear log approx + antilog shift.
+
+        ``log2(reg·2^-F) ≈ (e − F) + frac·2^-e`` with ``e = msb(reg)`` and
+        ``frac = reg − 2^e``; sums the two approximate logs in F-fraction-
+        bit integer arithmetic and shifts the antilog back.  Underestimates
+        by ≤ 0.0830 relative per multiply.  Every intermediate fits 32 bits
+        (shift amounts clipped to 31 — a >>31 of a < 2^31 base is 0 either
+        way), so the jax uint32 port is bit-identical.
+        """
+        F = np.uint64(self.frac_bits)
+        a, b = a.astype(np.uint64), b.astype(np.uint64)
+        ea, eb = msb(a), msb(b)
+        fa, fb = a - (np.uint64(1) << ea), b - (np.uint64(1) << eb)
+        # scale each fraction to F fraction bits: frac · 2^(F − e)
+        fa_s = np.where(ea <= F, fa << (F - np.minimum(ea, F)),
+                        fa >> (np.maximum(ea, F) - F))
+        fb_s = np.where(eb <= F, fb << (F - np.minimum(eb, F)),
+                        fb >> (np.maximum(eb, F) - F))
+        s = fa_s + fb_s  # < 2^(F+1): integer carry is s >> F
+        e2 = ea + eb + (s >> F)
+        f2 = s & ((np.uint64(1) << F) - np.uint64(1))
+        base = (np.uint64(1) << F) + f2  # antilog mantissa 1.f2, < 2^(F+1)
+        two_f = np.uint64(2) * F
+        shl = np.maximum(e2, two_f) - two_f
+        shr = np.minimum(two_f - np.minimum(e2, two_f), np.uint64(31))
+        res = np.where(e2 >= two_f, base << shl, base >> shr)
+        return np.where((a == 0) | (b == 0), np.uint64(0), res)
+
     def complement(self, r: np.ndarray) -> np.ndarray:
         """2's complement block: K = 2 − r exactly."""
         two = np.uint64(2) << np.uint64(self.frac_bits)
@@ -100,6 +166,10 @@ class FixedPointDatapath:
         idx = (frac >> np.uint64(self.frac_bits - self.p)).astype(np.int64)
         k = table[np.clip(idx, 0, (1 << self.p) - 1)]
         return k << np.uint64(self.frac_bits - (self.p + 2))
+
+    def _pass_mult(self, i: int):
+        """Multiplier block for Goldschmidt pass ``i`` (Mitchell early)."""
+        return self.mitchell_mult if i < self.mitchell_iters else self.mult
 
     # -- full datapaths ------------------------------------------------------
 
@@ -120,10 +190,11 @@ class FixedPointDatapath:
             k = self.complement(r)  # dedicated complement block i
             compls += 1
             last = i == passes - 1
-            q = self.mult(q, k)  # MULT X_i
+            mul = self._pass_mult(i)
+            q = mul(q, k)  # MULT X_i
             mults += 1
             if not last:  # final pass needs only q (paper Fig. 2: q4 ends it)
-                r = self.mult(r, k)  # MULT Y_i
+                r = mul(r, k)  # MULT Y_i
                 mults += 1
         return FixedResult(q, r, self.decode(q), mults, compls)
 
@@ -149,10 +220,11 @@ class FixedPointDatapath:
             k = self.complement(r_in)  # the single shared complement block
             compls += 1
             last = counter == passes - 1
-            q = self.mult(q, k)  # shared MULT X
+            mul = self._pass_mult(counter)
+            q = mul(q, k)  # shared MULT X
             mults += 1
             if not last:
-                r_fb = self.mult(r_in, k)  # shared MULT Y, feeds back
+                r_fb = mul(r_in, k)  # shared MULT Y, feeds back
                 mults += 1
                 fb_valid = True
             counter += 1

@@ -1,0 +1,237 @@
+"""Numeric formats: one policy axis covering float dtypes AND fixed point.
+
+PR 3 made precision a per-dtype policy — ``precision_policy(dtype)`` picks
+``(p, iters)`` on the ROM-vs-multiplier curve from the dtype's mantissa
+budget.  That curve generalizes: a fixed-point datapath is just another
+point on it, parameterized by ``(frac_bits, p, iters, mitchell_iters)``
+instead of a mantissa width.  :class:`NumericFormat` is that closure —
+every format knows its **certified bits** (floats: the measured seed-bits
+ladder from PR 3; fixed point: measured over a dense operand grid against
+the bit-exact numpy datapath — never the analytic bound) and therefore its
+error bound, which is what the kernel registry prunes candidates against
+and what BENCH_kernels.json gates quantized rows on.
+
+Also home to the int8 KV-cache quantization constants (the scale is
+static so both cache pools can share one arena dtype without a scale
+plane; ``pool_shardings``' rank rules are untouched).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import goldschmidt as gs
+from repro.core import lut
+from repro.core.fixed_point import FixedPointDatapath
+
+__all__ = [
+    "NumericFormat",
+    "format_for",
+    "fixed_bits",
+    "fixed_iters_needed",
+    "fixed_precision_policy",
+    "KV_AMAX",
+    "KV_SCALE",
+    "kv_quantize",
+    "kv_cast",
+    "kv_dequantize",
+]
+
+FIXED_FRAC_BITS = (16, 24, 30)  # the registry's frac_bits axis
+DEFAULT_FRAC_BITS = 24
+INT8_TARGET_BITS = 8  # an int8 tensor carries at most 8 significant bits
+
+
+# ---------------------------------------------------------------------------
+# measured accuracy of fixed-point (p, frac_bits, iters, mitchell) points
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _grid() -> Tuple[np.ndarray, np.ndarray]:
+    # dense, endpoint-heavy operand grid over the mantissa domain [1, 2):
+    # ROM bucket edges are the worst cases, so include near-edge points
+    d = np.linspace(1.0, 2.0, 513, endpoint=False)
+    d = np.concatenate([d, np.minimum(d + 2.0 ** -16, 2.0 - 2.0 ** -30)])
+    n = np.linspace(1.0, 2.0, 17, endpoint=False)
+    nn, dd = np.meshgrid(n, d)
+    return nn.ravel(), dd.ravel()
+
+
+@functools.lru_cache(maxsize=None)
+def fixed_bits(p: int, frac_bits: int, iters: int,
+               mitchell_iters: int = 0) -> int:
+    """Certified good bits of a fixed-point divide config — MEASURED.
+
+    Max relative quotient error of the bit-exact numpy datapath over the
+    dense grid, floored to bits.  Mitchell formats are certified the same
+    way (their error is far below the per-multiply 0.083 worst case when
+    applied after the seed stage, because the convergence factors are
+    already 1+ε — a measured fact, not an assumption).
+    """
+    dp = FixedPointDatapath(p=p, frac_bits=frac_bits,
+                            mitchell_iters=mitchell_iters)
+    n, d = _grid()
+    res = dp.divide_pipelined(n, d, iters)
+    exact = n / d
+    rel = np.max(np.abs(res.q_float - exact) / exact)
+    if rel <= 0:
+        return frac_bits
+    return min(int(np.floor(-np.log2(rel))), frac_bits)
+
+
+@functools.lru_cache(maxsize=None)
+def fixed_iters_needed(p: int, frac_bits: int, target_bits: int,
+                       mitchell_iters: int = 0) -> int:
+    """Min Goldschmidt passes to certify ``target_bits``, or the pass
+    count where accuracy saturates (frac_bits/Mitchell floor) if the
+    target is unreachable — the accuracy-frontier rule the registry
+    prunes fixed-kernel candidates with."""
+    prev = -1
+    for it in range(0, 7):
+        b = fixed_bits(p, frac_bits, it, mitchell_iters)
+        if b >= target_bits:
+            return it
+        # Saturation: the previous pass was as good.  Mitchell passes may
+        # plateau (their log-linear error floors the pass) while later
+        # EXACT passes still converge — only call it saturated once the
+        # approximate passes are behind us.
+        if b <= prev and it > mitchell_iters:
+            return it - 1
+        prev = b
+    return 6
+
+
+@functools.lru_cache(maxsize=None)
+def fixed_precision_policy(frac_bits: int, target_bits: int,
+                           mitchell_iters: int = 0,
+                           max_seed_p: int = 9) -> Tuple[int, int]:
+    """(p, iters) for a fixed datapath — the PR-3 selection rule, but
+    walked on the *fixed* measured ladder: smallest table whose seed alone
+    certifies the target (0 passes), else the default table with the
+    needed pass count."""
+    for cand in range(gs.DEFAULT_P, max_seed_p + 1):
+        if cand + 2 > frac_bits:
+            break
+        if fixed_bits(cand, frac_bits, 0, mitchell_iters) >= target_bits:
+            return cand, 0
+    return gs.DEFAULT_P, fixed_iters_needed(
+        gs.DEFAULT_P, frac_bits, target_bits, mitchell_iters)
+
+
+# ---------------------------------------------------------------------------
+# the format abstraction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericFormat:
+    """A numeric format the precision policy can budget for.
+
+    kind="float": ``dtype`` names an IEEE/bfloat type; (p, iters) come
+    from PR 3's ``precision_policy`` and certified bits from the measured
+    seed-bits ladder.  kind="fixed": a ``(frac_bits, p, iters,
+    mitchell_iters)`` datapath; certified bits are measured against the
+    bit-exact numpy reference.
+    """
+
+    kind: str  # "float" | "fixed"
+    dtype: Optional[str] = None
+    frac_bits: Optional[int] = None
+    p: Optional[int] = None
+    iters: Optional[int] = None
+    mitchell_iters: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("float", "fixed"):
+            raise ValueError(f"unknown format kind {self.kind!r}")
+        if self.kind == "fixed" and self.frac_bits is None:
+            raise ValueError("fixed formats need frac_bits")
+
+    @classmethod
+    def from_dtype(cls, dtype) -> "NumericFormat":
+        dt = jnp.dtype(dtype)
+        p, iters = gs.precision_policy(dt)
+        return cls(kind="float", dtype=dt.name, p=p, iters=iters)
+
+    @classmethod
+    def fixed(cls, frac_bits: int = DEFAULT_FRAC_BITS, *,
+              p: Optional[int] = None, iters: Optional[int] = None,
+              mitchell_iters: int = 0,
+              target_bits: int = INT8_TARGET_BITS) -> "NumericFormat":
+        if p is None or iters is None:
+            fp, fi = fixed_precision_policy(frac_bits, target_bits,
+                                            mitchell_iters)
+            p = fp if p is None else p
+            iters = (fixed_iters_needed(p, frac_bits, target_bits,
+                                        mitchell_iters)
+                     if iters is None else iters)
+        return cls(kind="fixed", frac_bits=frac_bits, p=p, iters=iters,
+                   mitchell_iters=mitchell_iters)
+
+    def certified_bits(self) -> int:
+        if self.kind == "float":
+            target = gs.target_bits_for(self.dtype)
+            got = lut.seed_bits(self.p) * (2 ** self.iters)
+            return min(target, got)
+        return fixed_bits(self.p, self.frac_bits, self.iters,
+                          self.mitchell_iters)
+
+    def error_bound(self) -> float:
+        """Max relative error this format is certified for."""
+        return 2.0 ** -self.certified_bits()
+
+    def precision(self) -> dict:
+        """Kernel-facing knobs (what dispatch pins on the launch)."""
+        out = {"p": self.p, "iters": self.iters}
+        if self.kind == "fixed":
+            out.update(frac_bits=self.frac_bits,
+                       mitchell_iters=self.mitchell_iters)
+        return out
+
+
+def format_for(name) -> NumericFormat:
+    """Format from a dtype-ish name; 'int8' is the fixed-point route."""
+    if str(name) in ("int8", "i1"):
+        return NumericFormat.fixed(DEFAULT_FRAC_BITS,
+                                   target_bits=INT8_TARGET_BITS)
+    return NumericFormat.from_dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (static symmetric scale, shared by the pools)
+# ---------------------------------------------------------------------------
+
+# Static absmax for K/V activations.  A per-token scale plane would change
+# the arena rank (and the pool_shardings rules with it); post-projection
+# K/V of the config zoo sit well inside ±4 at serving scale, and clipping
+# outliers costs less than widening the scale (bench_serve's divergence
+# budget is the empirical check).
+KV_AMAX = 4.0
+KV_SCALE = KV_AMAX / 127.0
+
+
+def kv_quantize(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_SCALE),
+                    -127.0, 127.0).astype(jnp.int8)
+
+
+def kv_cast(x: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Write-side cast into a cache leaf: quantize iff the leaf is int8."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(jnp.int8) and jnp.issubdtype(x.dtype,
+                                                       jnp.floating):
+        return kv_quantize(x)
+    return x.astype(dtype)
+
+
+def kv_dequantize(x: jnp.ndarray) -> jnp.ndarray:
+    """Read-side: int8 KV back to f32 (float caches just cast)."""
+    if x.dtype == jnp.dtype(jnp.int8):
+        return x.astype(jnp.float32) * np.float32(KV_SCALE)
+    return x.astype(jnp.float32)

@@ -127,8 +127,14 @@ def iters_needed(p: int, target_bits: int) -> int:
 
 
 def target_bits_for(dtype) -> int:
-    """Mantissa bits (incl. the implicit one) the output dtype can hold."""
+    """Mantissa bits (incl. the implicit one) the output dtype can hold.
+
+    int8 operands (the quantized serving path) carry at most 8
+    significant bits — the fixed-point kernel registry budgets on it.
+    """
     dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(jnp.int8):
+        return 8
     if dtype == jnp.dtype(jnp.bfloat16):
         return 8
     if dtype == jnp.dtype(jnp.float16):

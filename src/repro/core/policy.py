@@ -20,6 +20,13 @@ with the bit budget taken from ``target_bits`` when set (configs pin it to
 their compute dtype) and from the operand dtype otherwise.  fp32 budgets
 resolve to the paper's (7, 2) point; bf16 budgets run seed-only from a
 p ≥ 8 table, fp16 a single pass.
+
+``fmt`` generalizes the policy across numeric *formats*
+(:class:`repro.core.formats.NumericFormat`): with a fixed-point format,
+the four primitives route through the traceable integer datapath
+(:mod:`repro.core.fixed_point_jax`) instead of the float kernels — the
+int8 serving path (``ArchConfig.quant='int8'``) runs every division site
+through the narrow hardware the paper builds.
 """
 
 from __future__ import annotations
@@ -31,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import goldschmidt as gs
+from repro.core.formats import NumericFormat
 
 __all__ = ["NumericsPolicy", "EXACT", "GS_FEEDBACK", "GS_PIPELINED"]
 
@@ -43,6 +51,7 @@ class NumericsPolicy:
     p_bits: Optional[int] = None  # None → precision_policy-derived width
     iters: Optional[int] = None  # None → derived (accuracy counter)
     target_bits: Optional[int] = None  # None → from each operand's dtype
+    fmt: Optional[NumericFormat] = None  # None → float route; fixed → int
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -52,11 +61,26 @@ class NumericsPolicy:
     def variant(self) -> str:
         return "pipelined" if self.mode == "gs_pipelined" else "feedback"
 
+    @property
+    def is_fixed(self) -> bool:
+        """True when GS ops run the fixed-point integer datapath."""
+        return (self.fmt is not None and self.fmt.kind == "fixed"
+                and self.mode != "exact")
+
+    def _fixed_kw(self) -> dict:
+        return {"frac_bits": self.fmt.frac_bits, "p": self.fmt.p,
+                "iters": self.fmt.iters}
+
     # -- the four division-shaped primitives ---------------------------------
 
     def reciprocal(self, x: jnp.ndarray) -> jnp.ndarray:
         if self.mode == "exact":
             return 1.0 / x
+        if self.is_fixed:
+            from repro.core import fixed_point_jax as fpj
+            return fpj.recip_f32(x, variant=self.variant,
+                                 mitchell_iters=self.fmt.mitchell_iters,
+                                 **self._fixed_kw())
         return gs.gs_reciprocal(x, p=self.p_bits, iters=self.iters,
                                 variant=self.variant,
                                 target_bits=self.target_bits)
@@ -64,6 +88,11 @@ class NumericsPolicy:
     def divide(self, n: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
         if self.mode == "exact":
             return n / d
+        if self.is_fixed:
+            from repro.core import fixed_point_jax as fpj
+            return fpj.divide_f32(n, d, variant=self.variant,
+                                  mitchell_iters=self.fmt.mitchell_iters,
+                                  **self._fixed_kw())
         return gs.gs_divide(n, d, p=self.p_bits, iters=self.iters,
                             variant=self.variant,
                             target_bits=self.target_bits)
@@ -71,6 +100,9 @@ class NumericsPolicy:
     def rsqrt(self, x: jnp.ndarray) -> jnp.ndarray:
         if self.mode == "exact":
             return jax.lax.rsqrt(x)
+        if self.is_fixed:
+            from repro.core import fixed_point_jax as fpj
+            return fpj.rsqrt_f32(x, **self._fixed_kw())
         return gs.gs_rsqrt(x, p=self.p_bits, iters=self.iters,
                            variant=self.variant,
                            target_bits=self.target_bits)
@@ -78,6 +110,9 @@ class NumericsPolicy:
     def sqrt(self, x: jnp.ndarray) -> jnp.ndarray:
         if self.mode == "exact":
             return jnp.sqrt(x)
+        if self.is_fixed:
+            from repro.core import fixed_point_jax as fpj
+            return fpj.sqrt_f32(x, **self._fixed_kw())
         return gs.gs_sqrt(x, p=self.p_bits, iters=self.iters,
                           variant=self.variant,
                           target_bits=self.target_bits)

@@ -33,6 +33,9 @@ from __future__ import annotations
 from repro.kernels import common
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.gs_adam import gs_adam_update as _gs_adam_update
+from repro.kernels.gs_fixed import gs_fixed_recip as _gs_fixed_recip
+from repro.kernels.gs_fixed import gs_fixed_rmsnorm as _gs_fixed_rmsnorm
+from repro.kernels.gs_fixed import gs_fixed_softmax as _gs_fixed_softmax
 from repro.kernels.gs_recip import gs_recip as _gs_recip
 from repro.kernels.gs_rmsnorm import gs_rmsnorm as _gs_rmsnorm
 from repro.kernels.gs_rsqrt import gs_rsqrt as _gs_rsqrt
@@ -44,6 +47,9 @@ from repro.kernels.tuning.dispatch import interpret_default  # noqa: F401
 __all__ = [
     "flash_attention",
     "gs_adam_update",
+    "gs_fixed_recip",
+    "gs_fixed_rmsnorm",
+    "gs_fixed_softmax",
     "gs_recip",
     "gs_rmsnorm",
     "gs_rsqrt",
@@ -78,6 +84,31 @@ def gs_rmsnorm(x, gain, *, eps: float = 1e-6, p: int | None = None,
                **config):
     cfg = dispatch.resolve("gs_rmsnorm", x.shape, x.dtype, {"p": p, **config})
     return _gs_rmsnorm(x, gain, eps=eps, **cfg)
+
+
+# -- fixed-point (int8) epilogues -------------------------------------------
+# Same resolution path as the float kernels; ``frac_bits``/``mitchell_iters``
+# join (p, iters) as tunable axes, derived from the measured int8 frontier
+# (repro.core.formats) when unpinned.
+
+
+def gs_fixed_recip(x, scale=1.0, *, p: int | None = None, **config):
+    cfg = dispatch.resolve("gs_fixed_recip", x.shape, x.dtype,
+                           {"p": p, **config})
+    return _gs_fixed_recip(x, scale, **cfg)
+
+
+def gs_fixed_softmax(x, scale=1.0, *, p: int | None = None, **config):
+    cfg = dispatch.resolve("gs_fixed_softmax", x.shape, x.dtype,
+                           {"p": p, **config})
+    return _gs_fixed_softmax(x, scale, **cfg)
+
+
+def gs_fixed_rmsnorm(x, scale, gain, *, eps: float = 1e-6,
+                     p: int | None = None, **config):
+    cfg = dispatch.resolve("gs_fixed_rmsnorm", x.shape, x.dtype,
+                           {"p": p, **config})
+    return _gs_fixed_rmsnorm(x, scale, gain, eps=eps, **cfg)
 
 
 def gs_adam_update(param, grad, m, v, step, *, lr, beta1: float = 0.9,

@@ -61,6 +61,30 @@ def finalize(config: Mapping[str, Any], dtype=None) -> Dict[str, Any]:
     cfg = dict(config)
     if cfg.get("interpret") is None:
         cfg["interpret"] = interpret_default()
+    if "frac_bits" in cfg:
+        # Fixed-point kernel: the (p, iters) pair comes from the measured
+        # fixed frontier (formats.fixed_precision_policy), budgeted at the
+        # int8 target — the operand dtype (int8) has no mantissa to derive
+        # from.
+        from repro.core import formats
+
+        if cfg.get("frac_bits") is None:
+            cfg["frac_bits"] = formats.DEFAULT_FRAC_BITS
+        if cfg.get("mitchell_iters") is None:
+            cfg["mitchell_iters"] = 0
+        if cfg.get("p") is None and cfg.get("iters") is None:
+            cfg["p"], cfg["iters"] = formats.fixed_precision_policy(
+                cfg["frac_bits"], formats.INT8_TARGET_BITS,
+                cfg["mitchell_iters"])
+        elif cfg.get("iters") is None:
+            cfg["iters"] = formats.fixed_iters_needed(
+                cfg["p"], cfg["frac_bits"], formats.INT8_TARGET_BITS,
+                cfg["mitchell_iters"])
+        elif cfg.get("p") is None:
+            cfg["p"], _ = formats.fixed_precision_policy(
+                cfg["frac_bits"], formats.INT8_TARGET_BITS,
+                cfg["mitchell_iters"])
+        return cfg
     if "p" in cfg or "iters" in cfg:
         if cfg.get("p") is None or cfg.get("iters") is None:
             from repro.core.goldschmidt import resolve_precision

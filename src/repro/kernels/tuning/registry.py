@@ -32,11 +32,14 @@ from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import formats
 from repro.core.goldschmidt import iters_needed, target_bits_for
 from repro.kernels import common
 from repro.kernels.flash_attention import (flash_attention,
                                            flash_attention_bwd_bench)
 from repro.kernels.gs_adam import gs_adam_update
+from repro.kernels.gs_fixed import (gs_fixed_recip, gs_fixed_rmsnorm,
+                                    gs_fixed_softmax)
 from repro.kernels.gs_recip import gs_recip
 from repro.kernels.gs_rmsnorm import gs_rmsnorm
 from repro.kernels.gs_rsqrt import gs_rsqrt
@@ -80,6 +83,40 @@ def _precision_ok(config: Mapping[str, Any], dtype) -> bool:
     if p is None or iters is None:
         return True
     return iters == iters_needed(p, target_bits_for(dtype))
+
+
+def _fixed_p_axis(shape: Shape, dtype, backend: str) -> AxisValues:
+    # the fixed frontier's seed widths: the paper's default plus the
+    # seed-only widths that certify the int8 target without a pass
+    return (common.DEFAULT_P, 8, 9)
+
+
+def _fixed_iters_axis(shape: Shape, dtype, backend: str) -> AxisValues:
+    return tuple(sorted({
+        formats.fixed_iters_needed(p, fb, formats.INT8_TARGET_BITS, mit)
+        for p in _fixed_p_axis(shape, dtype, backend)
+        for fb in formats.FIXED_FRAC_BITS
+        for mit in (0, 1)
+        if fb >= p + 2
+    }))
+
+
+def _fixed_precision_ok(config: Mapping[str, Any], dtype) -> bool:
+    """The fixed-kernel frontier rule: a (p, frac_bits, iters,
+    mitchell_iters) point survives iff the register can hold the ROM word,
+    the pass count is exactly what the MEASURED ladder needs for the int8
+    target (no wasted pass, no undershoot), and every Mitchell pass
+    actually runs (a Mitchell format with fewer passes than
+    ``mitchell_iters`` is the exact format wearing a different label)."""
+    p, it = config.get("p"), config.get("iters")
+    fb = config.get("frac_bits")
+    mit = config.get("mitchell_iters", 0) or 0
+    if p is None or it is None or fb is None:
+        return True
+    if fb < p + 2 or mit > it:
+        return False
+    return it == formats.fixed_iters_needed(
+        p, fb, formats.INT8_TARGET_BITS, mit)
 
 
 def _interpret_axis(shape: Shape, dtype, backend: str) -> AxisValues:
@@ -126,6 +163,26 @@ def _args_adam(shape, dtype):
     return args, {"lr": 1e-3}
 
 
+def _args_fixed_elementwise(shape, dtype):
+    r = np.random.RandomState(6)
+    sgn = np.where(r.rand(*shape) < 0.5, -1, 1)
+    x = (r.randint(1, 128, shape) * sgn).astype(np.int8)  # nonzero: recip
+    return (jnp.asarray(x), 0.02), {}
+
+
+def _args_fixed_rowwise(shape, dtype):
+    r = np.random.RandomState(7)
+    x = r.randint(-127, 128, shape).astype(np.int8)
+    return (jnp.asarray(x), 0.03), {}
+
+
+def _args_fixed_rmsnorm(shape, dtype):
+    r = np.random.RandomState(8)
+    x = r.randint(-127, 128, shape).astype(np.int8)
+    g = jnp.asarray(r.randn(shape[-1]).astype(np.float32))
+    return (jnp.asarray(x), 0.03, g), {}
+
+
 def _args_flash(shape, dtype):
     b, h, s, d = shape
     r = np.random.RandomState(4)
@@ -148,6 +205,9 @@ class KernelSpec:
     axes: Mapping[str, Any]  # axis -> values tuple | AxisFn
     make_args: Callable[[Shape, Any], Tuple[tuple, dict]]
     supports: Callable[[Shape], bool] = lambda shape: len(shape) >= 1
+    # candidate filter; None -> the float (p, iters) frontier rule.  Fixed
+    # kernels swap in _fixed_precision_ok (the measured int8 ladder).
+    prune: Optional[Callable[[Mapping[str, Any], Any], bool]] = None
 
     def candidates(
         self, shape: Shape, dtype, backend: str
@@ -162,10 +222,11 @@ class KernelSpec:
             v(shape, dtype, backend) if callable(v) else v
             for v in (self.axes[n] for n in names)
         ]
+        ok = self.prune if self.prune is not None else _precision_ok
         return [
             cfg
             for combo in itertools.product(*values)
-            if _precision_ok(cfg := dict(zip(names, combo)), dtype)
+            if ok(cfg := dict(zip(names, combo)), dtype)
         ]
 
 
@@ -188,6 +249,34 @@ _ROWWISE_AXES = {
     "iters": _iters_axis,
     "interpret": _interpret_axis,
 }
+
+# Fixed-point (int8) kernel axes: ``frac_bits`` (register width) and
+# ``mitchell_iters`` (approximate-multiplier passes) join the sweep; the
+# joint candidate set is pruned to the measured int8 frontier by
+# :func:`_fixed_precision_ok`.
+_FIXED_ELEMENTWISE_AXES = {
+    "variant": ("feedback", "pipelined"),
+    "block_rows": (32, 64, 128),
+    "frac_bits": formats.FIXED_FRAC_BITS,
+    "mitchell_iters": (0, 1),
+    "p": _fixed_p_axis,
+    "iters": _fixed_iters_axis,
+    "interpret": _interpret_axis,
+}
+
+_FIXED_ROWWISE_AXES = {
+    "variant": ("feedback", "pipelined"),
+    "block_rows": (8, 16, 32),
+    "frac_bits": formats.FIXED_FRAC_BITS,
+    "mitchell_iters": (0, 1),
+    "p": _fixed_p_axis,
+    "iters": _fixed_iters_axis,
+    "interpret": _interpret_axis,
+}
+
+_FIXED_DEFAULTS = {"variant": "feedback", "p": None, "iters": None,
+                   "frac_bits": None, "mitchell_iters": None,
+                   "interpret": None}
 
 REGISTRY: Dict[str, KernelSpec] = {
     spec.name: spec
@@ -225,6 +314,32 @@ REGISTRY: Dict[str, KernelSpec] = {
             axes=_ROWWISE_AXES,
             make_args=_args_rowwise,
             supports=lambda shape: len(shape) >= 2,
+        ),
+        KernelSpec(
+            name="gs_fixed_recip",
+            fn=gs_fixed_recip,
+            defaults={**_FIXED_DEFAULTS, "block_rows": 64},
+            axes=_FIXED_ELEMENTWISE_AXES,
+            make_args=_args_fixed_elementwise,
+            prune=_fixed_precision_ok,
+        ),
+        KernelSpec(
+            name="gs_fixed_softmax",
+            fn=gs_fixed_softmax,
+            defaults={**_FIXED_DEFAULTS, "block_rows": 8},
+            axes=_FIXED_ROWWISE_AXES,
+            make_args=_args_fixed_rowwise,
+            supports=lambda shape: len(shape) >= 2,
+            prune=_fixed_precision_ok,
+        ),
+        KernelSpec(
+            name="gs_fixed_rmsnorm",
+            fn=gs_fixed_rmsnorm,
+            defaults={**_FIXED_DEFAULTS, "block_rows": 8},
+            axes=_FIXED_ROWWISE_AXES,
+            make_args=_args_fixed_rmsnorm,
+            supports=lambda shape: len(shape) >= 2,
+            prune=_fixed_precision_ok,
         ),
         KernelSpec(
             name="gs_adam",

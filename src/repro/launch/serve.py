@@ -148,6 +148,11 @@ def main() -> None:
     ap.add_argument("--pages", type=int, default=0,
                     help="--pool paged: arena pages (0 = worst case; "
                          "size it down to actually save memory)")
+    ap.add_argument("--quant", choices=("none", "int8"), default="none",
+                    help="int8: quantize weights per-tensor and the KV "
+                         "arena on the static KV scale; division sites "
+                         "route through the fixed-point Goldschmidt "
+                         "datapath under kernel_impl='pallas'")
     ap.add_argument("--mesh", default=None, metavar="SPEC",
                     help="serve sharded over a (data, model) device mesh: "
                          "'DxM', 'data=D,model=M', a bare TP width 'M', "
@@ -164,6 +169,10 @@ def main() -> None:
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
+    if args.quant != "none":
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, quant=args.quant)
     s_max = args.prompt_len + args.gen
     assert s_max <= cfg.max_seq, (s_max, cfg.max_seq)
 

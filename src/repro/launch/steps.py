@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, ArchConfig
+from repro.layers.quant import maybe_dequantize
 from repro.models import api
 from repro.optim import adamw_init, adamw_update, cosine, wsd
 from repro.runtime import sharding as shr
@@ -68,7 +69,11 @@ def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
                       dp: Tuple[str, ...] = ()) -> Callable:
     def prefill_step(params, batch):
         with shr.activation_context(mesh, dp):
-            logits, states, idx = api.prefill(cfg, params, batch)
+            # weight-only quantization: int8 params stay int8 in HBM; the
+            # dequant is a transient inside the jitted step (fused by XLA
+            # into the consuming matmuls)
+            logits, states, idx = api.prefill(cfg, maybe_dequantize(params),
+                                              batch)
             return logits, states, idx
 
     return prefill_step
@@ -81,7 +86,8 @@ def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
     takes a ``page_table`` keyword and reads/writes KV through it."""
     def decode_step(params, states, cur_index, batch, page_table=None):
         with shr.activation_context(mesh, dp):
-            return api.decode_step(cfg, params, states, cur_index, batch,
+            return api.decode_step(cfg, maybe_dequantize(params), states,
+                                   cur_index, batch,
                                    page_table=page_table,
                                    page_size=page_size)
 

@@ -26,6 +26,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import kv_cast, kv_dequantize
 from repro.core.policy import NumericsPolicy
 from repro.layers import init as linit
 from repro.runtime.sharding import constrain
@@ -310,8 +311,10 @@ def decode_attention(
     # (b, 1, h, hd) query is one tiny collective; letting GSPMD align the
     # batch-dim kh instead reshards the whole KV cache every tick
     qg = constrain(q.reshape(b, kh, g, hd), "dp", None, None, "model")
+    # kv_dequantize: plain f32 cast for float caches; int8 arenas (the
+    # quantized serving path) scale back by the static KV step
     logits = jnp.einsum(
-        "bkgd,btkd->bkgt", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+        "bkgd,btkd->bkgt", qg.astype(jnp.float32), kv_dequantize(k_cache)
     ) * sm_scale  # (b, kh, g, S)
     # contraction over the 'model'-sharded head_dim: pin the result
     # replicated over 'model' so GSPMD lowers the intended small psum
@@ -323,7 +326,7 @@ def decode_attention(
         cur = cur[:, None, None, None]
     logits = jnp.where(pos <= cur, logits, NEG_INF)
     probs = policy.softmax(logits, axis=-1)
-    o = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache.astype(jnp.float32))
+    o = jnp.einsum("bkgt,btkd->bkgd", probs, kv_dequantize(v_cache))
     o = constrain(o, "dp", None, None, "model")  # back on the cache layout
     return o.reshape(b, 1, h, hd).astype(q.dtype)
 
@@ -338,17 +341,18 @@ def cache_update(
     per-slot write positions (continuous batching).
     """
     cur = jnp.asarray(cur_index)
+    # kv_cast = astype for float caches, round-to-scale for int8 arenas
     if cur.ndim == 1:
         row = jax.vmap(
             lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
         )
-        return (row(k_cache, k_new.astype(k_cache.dtype), cur),
-                row(v_cache, v_new.astype(v_cache.dtype), cur))
+        return (row(k_cache, kv_cast(k_new, k_cache.dtype), cur),
+                row(v_cache, kv_cast(v_new, v_cache.dtype), cur))
     k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k_new.astype(k_cache.dtype), cur_index, axis=1
+        k_cache, kv_cast(k_new, k_cache.dtype), cur_index, axis=1
     )
     v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v_new.astype(v_cache.dtype), cur_index, axis=1
+        v_cache, kv_cast(v_new, v_cache.dtype), cur_index, axis=1
     )
     return k_cache, v_cache
 
@@ -385,8 +389,8 @@ def paged_cache_update(
     pid = jnp.take_along_axis(
         page_table, (cur // page_size)[:, None], axis=1)[:, 0]  # (b,)
     off = cur % page_size
-    return (k_arena.at[pid, off].set(k_new[:, 0].astype(k_arena.dtype)),
-            v_arena.at[pid, off].set(v_new[:, 0].astype(v_arena.dtype)))
+    return (k_arena.at[pid, off].set(kv_cast(k_new[:, 0], k_arena.dtype)),
+            v_arena.at[pid, off].set(kv_cast(v_new[:, 0], v_arena.dtype)))
 
 
 def gather_pages(arena: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:

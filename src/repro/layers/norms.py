@@ -26,6 +26,20 @@ def rmsnorm(params, x, *, eps: float, policy: NumericsPolicy,
     if kernel_impl == "pallas":
         from repro.kernels import ops
 
+        if policy.is_fixed:
+            # int8 datapath: quantize the activation per-tensor at the
+            # norm boundary and run the fused fixed-point kernel — the
+            # scale reciprocal is itself a policy division site.
+            x32 = x.astype(jnp.float32)
+            amax = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-6)
+            inv_amax = policy.reciprocal(amax)
+            xq = jnp.clip(jnp.round(x32 * (127.0 * inv_amax)),
+                          -127.0, 127.0).astype(jnp.int8)
+            out = ops.gs_fixed_rmsnorm(
+                xq, amax * (1.0 / 127.0), params["scale"], eps=eps,
+                variant=policy.variant, **policy.fmt.precision(),
+            )
+            return out.astype(x.dtype)
         # block_rows / interpret resolve through the tuning dispatch; the
         # policy pins the datapath variant and the (ROM width, iteration
         # count) pair whenever its accuracy budget differs from x's dtype

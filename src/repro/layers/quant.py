@@ -1,0 +1,78 @@
+"""Per-tensor int8 weight quantization for the serving path.
+
+``quantize_params`` maps a float param tree to ``{"q": ..., "s": ...}`` —
+two trees of identical structure holding symmetric per-tensor int8 data
+and f32 scales.  Only ≥ 2-D floating leaves quantize (matmul weights,
+embeddings); 1-D norm scales/biases and integer leaves pass through with
+a unit scale, so one tree_map pair reconstructs everything.
+
+The quantized tree is what crosses into jit: weights live in HBM as int8
+(half of bf16, a quarter of fp32) and are dequantized transiently inside
+the step functions (launch/steps.py) right before use — matmul →
+dequant → fixed-point-GS epilogue, per the quantized-datapath design.
+The wrapper dict keeps the inner leaf names, so the sharding rule table
+(rules key on the LAST path component) places int8 leaves exactly where
+it placed their float ancestors; scalar scales replicate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_params", "dequantize_params", "maybe_dequantize",
+           "is_quantized", "tree_bytes"]
+
+_QKEYS = frozenset({"q", "s"})
+
+
+def is_quantized(params: Any) -> bool:
+    return isinstance(params, dict) and set(params.keys()) == _QKEYS
+
+
+def _quantizable(leaf: jnp.ndarray, min_ndim: int) -> bool:
+    return (jnp.issubdtype(leaf.dtype, jnp.floating)
+            and leaf.ndim >= min_ndim)
+
+
+def quantize_params(params: Any, *, min_ndim: int = 2) -> Dict[str, Any]:
+    """Float tree → {"q": int8/passthrough tree, "s": f32 scale tree}."""
+    if is_quantized(params):
+        return params
+
+    def q_leaf(leaf):
+        if not _quantizable(leaf, min_ndim):
+            return leaf
+        amax = jnp.max(jnp.abs(leaf)).astype(jnp.float32)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        return jnp.clip(jnp.round(leaf.astype(jnp.float32) / scale),
+                        -127.0, 127.0).astype(jnp.int8)
+
+    def s_leaf(leaf):
+        if not _quantizable(leaf, min_ndim):
+            return jnp.float32(1.0)
+        amax = jnp.max(jnp.abs(leaf)).astype(jnp.float32)
+        return jnp.maximum(amax, 1e-12) / 127.0
+
+    return {"q": jax.tree.map(q_leaf, params),
+            "s": jax.tree.map(s_leaf, params)}
+
+
+def dequantize_params(params: Dict[str, Any], dtype=jnp.float32) -> Any:
+    """Reconstruct the float tree (int8 leaves scale up, others pass)."""
+    def one(q, s):
+        if q.dtype == jnp.dtype(jnp.int8):
+            return (q.astype(dtype) * s.astype(dtype)).astype(dtype)
+        return q
+
+    return jax.tree.map(one, params["q"], params["s"])
+
+
+def maybe_dequantize(params: Any, dtype=jnp.float32) -> Any:
+    return dequantize_params(params, dtype) if is_quantized(params) else params
+
+
+def tree_bytes(tree: Any) -> int:
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(tree)))

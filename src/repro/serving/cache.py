@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.formats import kv_cast
 from repro.models import api
 from repro.runtime import sharding as shr
 
@@ -95,7 +96,9 @@ def _graft_leaf(dst: jnp.ndarray, src: jnp.ndarray, origin) -> jnp.ndarray:
             raise ValueError(
                 f"cache graft axis {axis} overflows: {src.shape} "
                 f"into {dst.shape}")
-    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), origin)
+    # kv_cast: plain astype between float leaves; float->int8 KV leaves
+    # quantize on the static KV scale (the quantized serving path)
+    return jax.lax.dynamic_update_slice(dst, kv_cast(src, dst.dtype), origin)
 
 
 # Jitted + donated pool ops: slot/page indices are traced operands, so
@@ -162,7 +165,7 @@ def _paged_admit_impl(cache, states, pids, slot, *, page_size: int):
     def one(path, dst, src):
         if _leaf_name(path) in _PAGED_LEAVES:
             n = pids.shape[0]
-            buf = src[:, 0].astype(dst.dtype)  # (lead, s, KH, hd)
+            buf = kv_cast(src[:, 0], dst.dtype)  # (lead, s, KH, hd)
             pad = n * page_size - buf.shape[1]
             buf = jnp.pad(buf, ((0, 0), (0, pad), (0, 0), (0, 0)))
             buf = buf.reshape(buf.shape[0], n, page_size, *buf.shape[2:])
@@ -204,19 +207,36 @@ def _paged_fns(page_size: int, shardings=None):
     return _PAGED_FNS[key]
 
 
+def remap_kv_leaves(cache, kv_dtype):
+    """Rebuild a cache pytree with k/v leaves in ``kv_dtype`` (int8 KV
+    arenas for the quantized datapath).  Leaf *shapes* are untouched, so
+    ``pool_shardings``' rank rules apply unchanged."""
+    if kv_dtype is None:
+        return cache
+    kv_dtype = jnp.dtype(kv_dtype)
+
+    def one(path, leaf):
+        dt = kv_dtype if _leaf_name(path) in _PAGED_LEAVES else leaf.dtype
+        return jnp.zeros(leaf.shape, dt)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
 def make_paged_cache(cfg: ArchConfig, n_slots: int, n_pages: int,
-                     page_size: int, dtype):
+                     page_size: int, dtype, kv_dtype=None):
     """The paged twin of ``api.make_cache``: same pytree structure, but
     every k/v leaf is a ``(lead, n_pages, page_size, KH, hd)`` arena
-    shared by all slots; other leaves keep their slot axis."""
+    shared by all slots; other leaves keep their slot axis.  ``kv_dtype``
+    overrides the arena dtype (int8 for the quantized KV cache)."""
     dense = jax.eval_shape(
         lambda: api.make_cache(cfg, n_slots, page_size, jnp.dtype(dtype)))
+    arena_dt = jnp.dtype(dtype) if kv_dtype is None else jnp.dtype(kv_dtype)
 
     def one(path, leaf):
         if _leaf_name(path) in _PAGED_LEAVES:
             return jnp.zeros(
                 (leaf.shape[0], n_pages, page_size) + leaf.shape[3:],
-                leaf.dtype)
+                arena_dt)
         return jnp.zeros(leaf.shape, leaf.dtype)
 
     return jax.tree_util.tree_map_with_path(one, dense)
@@ -367,7 +387,8 @@ class SlotCachePool:
     """
 
     def __init__(self, cfg: ArchConfig, n_slots: int, s_max: int, dtype,
-                 mesh: Optional[Any] = None, shardings: Optional[Any] = None):
+                 mesh: Optional[Any] = None, shardings: Optional[Any] = None,
+                 kv_dtype=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         assert s_max <= cfg.max_seq, (s_max, cfg.max_seq)
@@ -375,7 +396,9 @@ class SlotCachePool:
         self.n_slots = n_slots
         self.s_max = s_max
         self.mesh = mesh
-        self.cache = api.make_cache(cfg, n_slots, s_max, dtype)
+        self.kv_dtype = kv_dtype
+        self.cache = remap_kv_leaves(
+            api.make_cache(cfg, n_slots, s_max, dtype), kv_dtype)
         if mesh is None:
             self.shardings = None
             self._write, self._zero = _write_row, _zero_row
@@ -477,7 +500,8 @@ class PagedCachePool:
     def __init__(self, cfg: ArchConfig, n_slots: int, s_max: int, dtype,
                  *, page_size: int = 16, n_pages: int = 0,
                  share: str = "exact",
-                 mesh: Optional[Any] = None, shardings: Optional[Any] = None):
+                 mesh: Optional[Any] = None, shardings: Optional[Any] = None,
+                 kv_dtype=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if page_size < 1:
@@ -500,8 +524,9 @@ class PagedCachePool:
                 f"n_pages={self.n_pages} cannot fit one s_max={s_max} "
                 f"request ({self.pages_per_slot} pages) + the trash page")
         self.share = share
+        self.kv_dtype = kv_dtype
         self.cache = make_paged_cache(cfg, n_slots, self.n_pages, page_size,
-                                      dtype)
+                                      dtype, kv_dtype=kv_dtype)
         if mesh is None:
             self.shardings = None
             self._admit, self._copy = _paged_fns(page_size)

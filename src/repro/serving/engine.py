@@ -86,10 +86,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.layers.quant import quantize_params
 from repro.models import api
 from repro.runtime import sharding as shr
 from repro.serving.cache import (CachePool, PagedCachePool, SlotCachePool,
-                                 make_paged_cache)
+                                 make_paged_cache, remap_kv_leaves)
 from repro.serving.requests import (FINISHED, QUEUED, RUNNING,
                                     GenerationResult, Request, RequestState,
                                     SamplingParams, ServeResult)
@@ -197,6 +198,14 @@ class Engine:
         self._pages_per_slot = -(-self.s_max // self.ecfg.page_size)
         self._n_pages = self.ecfg.n_pages or (
             self.ecfg.n_slots * self._pages_per_slot + 1)
+        # cfg.quant != "none" turns on the quantized datapath: params go
+        # int8 in HBM (dequantized transiently inside the jitted steps,
+        # launch/steps.py) and the KV arena leaves of either pool go int8
+        # on the static KV scale (core/formats.py).  Leaf names and ranks
+        # are unchanged, so the sharding rule tables apply as-is.
+        self._kv_dtype = jnp.int8 if cfg.quant != "none" else None
+        if cfg.quant != "none":
+            params = quantize_params(params)
         if mesh is None:
             self.params = params
             self._dp = ()
@@ -212,11 +221,12 @@ class Engine:
             if self._paged:
                 cache_specs = jax.eval_shape(lambda: make_paged_cache(
                     cfg, self.ecfg.n_slots, self._n_pages,
-                    self.ecfg.page_size, jnp.dtype(cfg.dtype)))
+                    self.ecfg.page_size, jnp.dtype(cfg.dtype),
+                    kv_dtype=self._kv_dtype))
             else:
-                cache_specs = jax.eval_shape(lambda: api.make_cache(
-                    cfg, self.ecfg.n_slots, self.s_max,
-                    jnp.dtype(cfg.dtype)))
+                cache_specs = jax.eval_shape(lambda: remap_kv_leaves(
+                    api.make_cache(cfg, self.ecfg.n_slots, self.s_max,
+                                   jnp.dtype(cfg.dtype)), self._kv_dtype))
             self._cache_sh = shr.pool_shardings(
                 mesh, cfg, cache_specs, self.ecfg.n_slots)
         self._prefill = jax.jit(make_prefill_step(cfg, mesh=mesh, dp=()))
@@ -233,10 +243,12 @@ class Engine:
                 self.cfg, self.ecfg.n_slots, self.s_max,
                 jnp.dtype(self.cfg.dtype), page_size=self.ecfg.page_size,
                 n_pages=self._n_pages, share=self.ecfg.prefix,
-                mesh=self.mesh, shardings=self._cache_sh)
+                mesh=self.mesh, shardings=self._cache_sh,
+                kv_dtype=self._kv_dtype)
         return SlotCachePool(self.cfg, self.ecfg.n_slots, self.s_max,
                              jnp.dtype(self.cfg.dtype), mesh=self.mesh,
-                             shardings=self._cache_sh)
+                             shardings=self._cache_sh,
+                             kv_dtype=self._kv_dtype)
 
     def _effective_k(self, req: Request) -> int:
         return req.sampling.top_k or self.ecfg.top_k

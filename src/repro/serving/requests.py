@@ -18,6 +18,7 @@ deprecated shims for one release (they populate / default into
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -85,6 +86,11 @@ class Request:
             raise ValueError(
                 f"request {self.rid}: max_new_tokens must be >= 1")
         if self.sampling is None:
+            if self.temperature:
+                warnings.warn(
+                    "Request(temperature=...) is deprecated; pass "
+                    "sampling=SamplingParams(temperature=...)",
+                    DeprecationWarning, stacklevel=3)
             self.sampling = SamplingParams(temperature=self.temperature)
         elif (self.temperature
               and self.temperature != self.sampling.temperature):

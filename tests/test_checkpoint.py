@@ -59,6 +59,43 @@ class TestSaveLoad:
             load_checkpoint(path, bigger)
 
 
+class TestQuantizedFormats:
+    """fp8 / int8 leaves round-trip bit-exactly (the quantized serving
+    datapath checkpoints int8 weight trees; fp8 covers the encoded-leaf
+    path for dtypes numpy's .npy header cannot express)."""
+
+    @pytest.mark.parametrize("dtype", ["float8_e4m3fn", "float8_e5m2"])
+    def test_fp8_roundtrip_bit_exact(self, tmp_path, dtype):
+        import ml_dtypes
+
+        dt = np.dtype(getattr(ml_dtypes, dtype))
+        r = np.random.RandomState(3)
+        tree = {"w": jnp.asarray(r.randn(8, 4).astype(dt)),
+                "b": jnp.asarray(r.randn(16).astype(dt))}
+        path = save_checkpoint(str(tmp_path), 2, tree)
+        restored, _ = load_checkpoint(path, jax.eval_shape(lambda: tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert np.dtype(b.dtype) == dt
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8))
+
+    def test_int8_quantized_params_roundtrip(self, tmp_path):
+        from repro.layers.quant import dequantize_params, quantize_params
+
+        r = np.random.RandomState(4)
+        params = {"wq": jnp.asarray(r.randn(8, 8), jnp.float32),
+                  "scale": jnp.asarray(r.randn(8), jnp.float32)}
+        qp = quantize_params(params)
+        path = save_checkpoint(str(tmp_path), 3, qp)
+        restored, _ = load_checkpoint(path, jax.eval_shape(lambda: qp))
+        for a, b in zip(jax.tree.leaves(qp), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_params(qp)["wq"]),
+            np.asarray(dequantize_params(restored)["wq"]))
+
+
 class TestManager:
     def test_retention_keeps_last_k(self, tmp_path):
         mgr = CheckpointManager(str(tmp_path), keep=2)

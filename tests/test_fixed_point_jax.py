@@ -1,0 +1,169 @@
+"""Bit-exact parity: the traceable jax datapath vs the numpy reference.
+
+The jax port (core/fixed_point_jax.py) exists so the paper's fixed-point
+datapath can run inside jitted serving ticks; its contract is that every
+register it produces is IDENTICAL to the uint64 numpy emulation across
+the whole (p, frac_bits, variant, mitchell) space — not close, equal.
+Also covers the f32 wrapper accuracy, the Mitchell error bound (measured,
+never assumed) and the accuracy-frontier rules the registry prunes with.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.core.fixed_point import FixedPointDatapath
+from repro.core.fixed_point_jax import (FixedPointJax, divide_f32, recip_f32,
+                                        rsqrt_f32, sqrt_f32)
+
+PASSES = 2
+
+
+def _operands(rng, n=512):
+    """Mantissa-domain operands incl. the ROM bucket edges (worst cases)."""
+    d = rng.uniform(1.0, 2.0, n)
+    d = np.concatenate([d, [1.0, 1.5, 2.0 - 2.0 ** -20],
+                        1.0 + np.arange(1, 8) / 8.0 + 1e-9])
+    n_ = rng.uniform(1.0, 2.0 - 1e-9, d.shape[0])
+    return n_, d
+
+
+@pytest.mark.parametrize("p", [5, 6, 7, 8, 9, 10, 11, 12])
+@pytest.mark.parametrize("frac_bits", [16, 24, 30])
+def test_divide_bit_exact_vs_numpy(p, frac_bits):
+    rng = np.random.RandomState(p * 100 + frac_bits)
+    n, d = _operands(rng)
+    for mitchell in (0, 1):
+        np_dp = FixedPointDatapath(p=p, frac_bits=frac_bits,
+                                   mitchell_iters=mitchell)
+        jx_dp = FixedPointJax(p=p, frac_bits=frac_bits,
+                              mitchell_iters=mitchell)
+        n_reg = np_dp.encode(n).astype(np.uint32)
+        d_reg = np_dp.encode(d).astype(np.uint32)
+        for variant in ("pipelined", "feedback"):
+            ref = (np_dp.divide_pipelined if variant == "pipelined"
+                   else np_dp.divide_feedback)(n, d, PASSES)
+            q, r = jx_dp.divide(jnp.asarray(n_reg), jnp.asarray(d_reg),
+                                PASSES, variant)
+            np.testing.assert_array_equal(
+                np.asarray(q, np.uint64), ref.q,
+                err_msg=f"q mismatch p={p} F={frac_bits} {variant} "
+                        f"mit={mitchell}")
+            np.testing.assert_array_equal(
+                np.asarray(r, np.uint64), ref.r,
+                err_msg=f"r mismatch p={p} F={frac_bits} {variant} "
+                        f"mit={mitchell}")
+
+
+def test_seed_only_and_deep_pass_counts_bit_exact():
+    """Pass counts beyond the default: 0 (seed-only, the int8 policy
+    point) and 4 (deep convergence) stay bit-identical too."""
+    rng = np.random.RandomState(17)
+    n, d = _operands(rng, 128)
+    np_dp = FixedPointDatapath(p=8, frac_bits=24)
+    jx_dp = FixedPointJax(p=8, frac_bits=24)
+    n_reg = np_dp.encode(n).astype(np.uint32)
+    d_reg = np_dp.encode(d).astype(np.uint32)
+    for passes in (0, 1, 4):
+        ref = np_dp.divide_feedback(n, d, passes)
+        q, r = jx_dp.divide(jnp.asarray(n_reg), jnp.asarray(d_reg), passes)
+        np.testing.assert_array_equal(np.asarray(q, np.uint64), ref.q)
+        np.testing.assert_array_equal(np.asarray(r, np.uint64), ref.r)
+
+
+def test_k1_override_matches_internal_rom():
+    """The Pallas kernels gather the ROM seed with a one-hot matmul and
+    pass it in; an explicit k1 equal to rom(d) must change nothing."""
+    rng = np.random.RandomState(23)
+    n, d = _operands(rng, 64)
+    np_dp = FixedPointDatapath(p=7, frac_bits=24)
+    jx_dp = FixedPointJax(p=7, frac_bits=24)
+    n_reg = jnp.asarray(np_dp.encode(n).astype(np.uint32))
+    d_reg = jnp.asarray(np_dp.encode(d).astype(np.uint32))
+    k1 = jx_dp.rom(d_reg)
+    for variant in ("pipelined", "feedback"):
+        q0, r0 = jx_dp.divide(n_reg, d_reg, PASSES, variant)
+        q1, r1 = jx_dp.divide(n_reg, d_reg, PASSES, variant, k1=k1)
+        np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1))
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+
+class TestMitchellErrorBounded:
+    def test_mitchell_error_within_certified_bound(self):
+        """A Mitchell format's measured certification (formats.fixed_bits
+        runs the numpy datapath over the dense grid) must bound the jax
+        datapath on that same grid — bit-exactness makes this exact."""
+        fb, p, mit = 24, 7, 1
+        iters = formats.fixed_iters_needed(p, fb, 8, mit)
+        fmt = formats.NumericFormat.fixed(fb, p=p, iters=iters,
+                                          mitchell_iters=mit)
+        n, d = formats._grid()
+        dp = FixedPointJax(p=p, frac_bits=fb, mitchell_iters=mit)
+        np_dp = FixedPointDatapath(p=p, frac_bits=fb, mitchell_iters=mit)
+        q, _ = dp.divide(jnp.asarray(np_dp.encode(n).astype(np.uint32)),
+                         jnp.asarray(np_dp.encode(d).astype(np.uint32)),
+                         iters)
+        got = np.asarray(q, np.float64) * 2.0 ** -fb
+        rel = np.max(np.abs(got - n / d) / (n / d))
+        assert rel <= fmt.error_bound(), (rel, fmt.error_bound())
+
+    def test_mitchell_underestimates(self):
+        """Mitchell's antilog is ≤ the exact product (2^f ≥ 1+f)."""
+        rng = np.random.RandomState(5)
+        dp = FixedPointJax(p=7, frac_bits=24)
+        a = jnp.asarray((rng.uniform(0.5, 2.0, 256) * 2 ** 24)
+                        .astype(np.uint32))
+        b = jnp.asarray((rng.uniform(0.5, 2.0, 256) * 2 ** 24)
+                        .astype(np.uint32))
+        assert bool(jnp.all(dp.mitchell_mult(a, b) <= dp.mult(a, b)))
+
+
+class TestF32Wrappers:
+    def test_recip_and_divide_accuracy(self):
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.uniform(0.1, 100.0, 512).astype(np.float32))
+        got = np.asarray(recip_f32(x))
+        np.testing.assert_allclose(got, 1.0 / np.asarray(x), rtol=3e-7)
+        n = jnp.asarray(rng.uniform(0.1, 100.0, 512).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(divide_f32(n, x)),
+                                   np.asarray(n) / np.asarray(x), rtol=3e-7)
+
+    def test_rsqrt_and_sqrt_accuracy(self):
+        rng = np.random.RandomState(1)
+        x = jnp.asarray(rng.uniform(0.01, 1000.0, 512).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(rsqrt_f32(x)),
+                                   1.0 / np.sqrt(np.asarray(x)), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(sqrt_f32(x)),
+                                   np.sqrt(np.asarray(x)), rtol=1e-6)
+
+    def test_specials_fall_back(self):
+        x = jnp.asarray(np.array([0.0, np.inf, -2.0, np.nan], np.float32))
+        got = np.asarray(recip_f32(x))
+        assert got[0] == np.inf and got[1] == 0.0
+        np.testing.assert_allclose(got[2], -0.5, rtol=3e-7)
+        assert np.isnan(got[3])
+        assert np.asarray(sqrt_f32(jnp.zeros((4,), jnp.float32)))[0] == 0.0
+
+
+class TestAccuracyFrontier:
+    def test_int8_format_certifies_8_bits(self):
+        fmt = formats.format_for("int8")
+        assert fmt.kind == "fixed"
+        assert fmt.certified_bits() >= formats.INT8_TARGET_BITS
+        assert fmt.error_bound() <= 2.0 ** -8
+
+    def test_mitchell_plateau_is_not_saturation(self):
+        """A Mitchell pass may not improve accuracy while the NEXT exact
+        pass still converges — iters_needed must look past the plateau
+        (the bug that would prune every Mitchell format off the
+        frontier)."""
+        assert formats.fixed_iters_needed(7, 24, 8, 0) == 1
+        assert formats.fixed_iters_needed(7, 24, 8, 1) == 2
+
+    def test_more_passes_never_lose_certified_bits_pre_saturation(self):
+        for p, fb in ((7, 16), (7, 24), (8, 24), (7, 30)):
+            need = formats.fixed_iters_needed(p, fb, 8)
+            bits = [formats.fixed_bits(p, fb, it) for it in range(need + 1)]
+            assert bits == sorted(bits), (p, fb, bits)
+            assert bits[-1] >= 8

@@ -644,10 +644,21 @@ class TestPagedCachePool:
 
 class TestSamplingParamsAPI:
     def test_temperature_kwarg_shim_populates_sampling(self):
-        r = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2,
-                    temperature=0.7)
+        with pytest.warns(DeprecationWarning, match="SamplingParams"):
+            r = Request(rid=0, prompt=np.zeros(4, np.int32),
+                        max_new_tokens=2, temperature=0.7)
         assert r.sampling.temperature == 0.7
         assert r.sampling.stochastic
+
+    def test_sampling_params_route_does_not_warn(self):
+        import warnings as _w
+
+        with _w.catch_warnings():
+            _w.simplefilter("error", DeprecationWarning)
+            r = Request(rid=0, prompt=np.zeros(4, np.int32),
+                        max_new_tokens=2,
+                        sampling=SamplingParams(temperature=0.7))
+        assert r.temperature == 0.7  # mirror stays consistent
 
     def test_conflicting_kwarg_and_sampling_rejected(self):
         with pytest.raises(ValueError):
