@@ -108,6 +108,11 @@ def main() -> None:
               f"bytes x{qt['bytes_ratio_vs_bf16']:.3f} vs bf16, "
               f"matched {qt['matched_frac_vs_fp32']:.2f} vs fp32 ref, "
               f"pools agree={qt['pool_parity']}\"")
+        rs = rec["resilience"]
+        print(f"serve_resilience,{rs['tick_us_guard_on']:.1f},"
+              f"\"numeric guard x{rs['overhead_ratio']:.3f} per tick "
+              f"(off: {rs['tick_us_guard_off']:.1f} us, "
+              f"budget x{rs['budget']:.2f})\"")
         print(f"# wrote {args.json or DEFAULT_SERVE_JSON}", file=sys.stderr)
         if args.check and not rec["ok"]:
             for name, ok in rec["checks"].items():

@@ -18,6 +18,16 @@ while bf16 runs seed-only (8, 0) and fp16 single-pass (7, 1).
 real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
 ``interpret=False``) and the same BlockSpecs compile via Mosaic.
 
+Every front-end routes through :func:`dispatch.call_with_fallback`: a
+kernel that fails to trace/lower/compile (Pallas interpret bug, Mosaic
+hole on a new backend, poisoned tuning-cache config) downgrades to its
+jnp oracle (:mod:`repro.kernels.ref`; exact-arithmetic references for
+the fixed-point kernels) instead of propagating — serving degrades,
+it doesn't die.  Downgrades are counted per kernel
+(``dispatch.fallback_stats()``; surfaced as
+``ServeMetrics.kernel_fallbacks``); disable the route with
+``REPRO_KERNEL_FALLBACK=0`` when a failure must stay visible.
+
 All ops are differentiable: each kernel carries a ``custom_vjp`` whose
 rule runs on saved forward outputs (quotient / rsqrt / softmax /
 (m, l) attention statistics) instead of autodiffing the Goldschmidt
@@ -30,7 +40,11 @@ attention's backward tile shapes resolve through the dispatch under the
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+
 from repro.kernels import common
+from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.gs_adam import gs_adam_update as _gs_adam_update
 from repro.kernels.gs_fixed import gs_fixed_recip as _gs_fixed_recip
@@ -59,31 +73,49 @@ __all__ = [
 ]
 
 
+def _gs_kw(cfg):
+    """The Goldschmidt-math subset of a launch config — what the jnp
+    oracles accept (tiling/interpret keys are kernel-only)."""
+    return {k: cfg[k] for k in ("p", "iters", "variant") if k in cfg}
+
+
 def gs_recip(x, *, p: int | None = None, **config):
     cfg = dispatch.resolve("gs_recip", x.shape, x.dtype, {"p": p, **config})
-    return _gs_recip(x, **cfg)
+    return dispatch.call_with_fallback(
+        "gs_recip", lambda: _gs_recip(x, **cfg),
+        lambda: _ref.reciprocal(x, **_gs_kw(cfg)))
 
 
 def gs_rsqrt(x, *, p: int | None = None, **config):
     cfg = dispatch.resolve("gs_rsqrt", x.shape, x.dtype, {"p": p, **config})
-    return _gs_rsqrt(x, **cfg)
+    return dispatch.call_with_fallback(
+        "gs_rsqrt", lambda: _gs_rsqrt(x, **cfg),
+        lambda: _ref.rsqrt(x, **_gs_kw(cfg)))
 
 
 def gs_sqrt(x, *, p: int | None = None, **config):
     # Same datapath, ROM, and tiling as rsqrt — shares its tuning entry.
     cfg = dispatch.resolve("gs_rsqrt", x.shape, x.dtype, {"p": p, **config})
-    return _gs_sqrt(x, **cfg)
+    from repro.core import goldschmidt as _gs
+
+    return dispatch.call_with_fallback(
+        "gs_sqrt", lambda: _gs_sqrt(x, **cfg),
+        lambda: _gs.gs_sqrt(x, **_gs_kw(cfg)))
 
 
 def gs_softmax(x, *, p: int | None = None, **config):
     cfg = dispatch.resolve("gs_softmax", x.shape, x.dtype, {"p": p, **config})
-    return _gs_softmax(x, **cfg)
+    return dispatch.call_with_fallback(
+        "gs_softmax", lambda: _gs_softmax(x, **cfg),
+        lambda: _ref.softmax(x, **_gs_kw(cfg)))
 
 
 def gs_rmsnorm(x, gain, *, eps: float = 1e-6, p: int | None = None,
                **config):
     cfg = dispatch.resolve("gs_rmsnorm", x.shape, x.dtype, {"p": p, **config})
-    return _gs_rmsnorm(x, gain, eps=eps, **cfg)
+    return dispatch.call_with_fallback(
+        "gs_rmsnorm", lambda: _gs_rmsnorm(x, gain, eps=eps, **cfg),
+        lambda: _ref.rmsnorm(x, gain, eps=eps, **_gs_kw(cfg)))
 
 
 # -- fixed-point (int8) epilogues -------------------------------------------
@@ -95,20 +127,36 @@ def gs_rmsnorm(x, gain, *, eps: float = 1e-6, p: int | None = None,
 def gs_fixed_recip(x, scale=1.0, *, p: int | None = None, **config):
     cfg = dispatch.resolve("gs_fixed_recip", x.shape, x.dtype,
                            {"p": p, **config})
-    return _gs_fixed_recip(x, scale, **cfg)
+    # Fixed-kernel fallbacks are the exact float expression of the op's
+    # contract (f(x * scale) in f32) — the degraded path trades the
+    # multiplier-only datapath for accuracy, never the reverse.
+    return dispatch.call_with_fallback(
+        "gs_fixed_recip", lambda: _gs_fixed_recip(x, scale, **cfg),
+        lambda: 1.0 / (x.astype(jnp.float32) * scale))
 
 
 def gs_fixed_softmax(x, scale=1.0, *, p: int | None = None, **config):
     cfg = dispatch.resolve("gs_fixed_softmax", x.shape, x.dtype,
                            {"p": p, **config})
-    return _gs_fixed_softmax(x, scale, **cfg)
+    return dispatch.call_with_fallback(
+        "gs_fixed_softmax", lambda: _gs_fixed_softmax(x, scale, **cfg),
+        lambda: jax.nn.softmax(x.astype(jnp.float32) * scale, axis=-1))
+
+
+def _fixed_rmsnorm_ref(x, scale, gain, eps):
+    xf = x.astype(jnp.float32) * scale
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return xf * jax.lax.rsqrt(ms + eps) * gain.astype(jnp.float32)
 
 
 def gs_fixed_rmsnorm(x, scale, gain, *, eps: float = 1e-6,
                      p: int | None = None, **config):
     cfg = dispatch.resolve("gs_fixed_rmsnorm", x.shape, x.dtype,
                            {"p": p, **config})
-    return _gs_fixed_rmsnorm(x, scale, gain, eps=eps, **cfg)
+    return dispatch.call_with_fallback(
+        "gs_fixed_rmsnorm", lambda: _gs_fixed_rmsnorm(x, scale, gain,
+                                                      eps=eps, **cfg),
+        lambda: _fixed_rmsnorm_ref(x, scale, gain, eps))
 
 
 def gs_adam_update(param, grad, m, v, step, *, lr, beta1: float = 0.9,
@@ -117,9 +165,15 @@ def gs_adam_update(param, grad, m, v, step, *, lr, beta1: float = 0.9,
                    **config):
     cfg = dispatch.resolve("gs_adam", param.shape, param.dtype,
                            {"p": p, **config})
-    return _gs_adam_update(param, grad, m, v, step, lr=lr, beta1=beta1,
-                           beta2=beta2, eps=eps, weight_decay=weight_decay,
-                           **cfg)
+    return dispatch.call_with_fallback(
+        "gs_adam",
+        lambda: _gs_adam_update(param, grad, m, v, step, lr=lr, beta1=beta1,
+                                beta2=beta2, eps=eps,
+                                weight_decay=weight_decay, **cfg),
+        lambda: _ref.adam_update(param, grad, m, v, lr=lr, beta1=beta1,
+                                 beta2=beta2, eps=eps,
+                                 weight_decay=weight_decay, step=step,
+                                 **_gs_kw(cfg)))
 
 
 def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
@@ -133,4 +187,9 @@ def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
     for key in ("block_q", "block_kv"):
         if config.get(key) is None:
             cfg[key] = common.fit_block(s, cfg[key])
-    return _flash_attention(q, k, v, causal=causal, sm_scale=sm_scale, **cfg)
+    return dispatch.call_with_fallback(
+        "flash_attention",
+        lambda: _flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                                 **cfg),
+        lambda: _ref.attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                               **_gs_kw(cfg)))

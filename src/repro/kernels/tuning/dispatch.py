@@ -19,7 +19,9 @@ executable.
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, Mapping, Optional, Sequence
+import warnings
+from collections import Counter
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence
 
 import jax
 
@@ -27,8 +29,11 @@ from repro.kernels.tuning import cache as cache_mod
 from repro.kernels.tuning import registry
 
 ENV_ENABLE = "REPRO_AUTOTUNE"
+ENV_FALLBACK = "REPRO_KERNEL_FALLBACK"
 
 _enabled_override: Optional[bool] = None
+_fallback_override: Optional[bool] = None
+_fallback_counts: Counter = Counter()
 
 
 def interpret_default() -> bool:
@@ -47,6 +52,65 @@ def enable_tuning(on: Optional[bool] = True) -> None:
     to the ``REPRO_AUTOTUNE`` environment variable."""
     global _enabled_override
     _enabled_override = on
+
+
+# -- pallas -> jnp fallback route --------------------------------------------
+# Graceful degradation: a kernel that fails to trace/lower (a Pallas
+# interpret bug, a Mosaic lowering hole on a new backend, a bad tuned
+# config from a foreign cache entry) downgrades to its jnp oracle
+# (kernels/ref.py) instead of killing the request — serving keeps
+# answering, slower.  The downgrade is counted per kernel so the serving
+# metrics (ServeMetrics.kernel_fallbacks) and operators can see it.
+# On by default; kill with REPRO_KERNEL_FALLBACK=0 (tests/benchmarks
+# that must observe the real kernel failure).
+
+
+def fallback_enabled() -> bool:
+    if _fallback_override is not None:
+        return _fallback_override
+    return os.environ.get(ENV_FALLBACK, "1").lower() not in ("0", "", "false")
+
+
+def enable_fallback(on: Optional[bool] = True) -> None:
+    """Force the fallback route on/off for this process; ``None`` defers
+    back to the ``REPRO_KERNEL_FALLBACK`` environment variable."""
+    global _fallback_override
+    _fallback_override = on
+
+
+def fallback_stats() -> Dict[str, int]:
+    """Per-kernel downgrade counts since process start (or last reset)."""
+    return dict(_fallback_counts)
+
+
+def fallback_total() -> int:
+    return sum(_fallback_counts.values())
+
+
+def reset_fallback_stats() -> None:
+    _fallback_counts.clear()
+
+
+def call_with_fallback(kernel: str, primary: Callable[[], Any],
+                       fallback: Callable[[], Any]) -> Any:
+    """Run ``primary`` (the Pallas kernel call, as a thunk); on any
+    exception, record the downgrade and run ``fallback`` (the jnp
+    oracle).  Resolution and the kernels run at trace time, so this
+    catches trace/lower/compile failures — exactly where kernel faults
+    surface in this stack (interpret mode included)."""
+    if not fallback_enabled():
+        return primary()
+    try:
+        return primary()
+    except (KeyboardInterrupt, SystemExit):
+        raise
+    except Exception as e:  # noqa: BLE001 - the whole point is containment
+        _fallback_counts[kernel] += 1
+        warnings.warn(
+            f"kernel {kernel} failed ({type(e).__name__}: {e}); "
+            "downgrading to the jnp reference", RuntimeWarning,
+            stacklevel=3)
+        return fallback()
 
 
 def finalize(config: Mapping[str, Any], dtype=None) -> Dict[str, Any]:

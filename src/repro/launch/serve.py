@@ -53,7 +53,8 @@ def build_requests(args, cfg, rng: np.random.RandomState):
     if args.trace and args.rate <= 0:
         raise SystemExit("--rate must be > 0 (requests/second)")
     sampling = SamplingParams(temperature=args.temperature,
-                              top_k=args.top_k)
+                              top_k=args.top_k,
+                              deadline_ms=args.deadline_ms)
     if not args.trace:
         # genuinely identical: one prompt (and one frame draw) shared by
         # every request, so --pool paged demonstrates prefix sharing
@@ -112,6 +113,15 @@ def report(outs, metrics, scheduler: str) -> None:
               f"{metrics.prefill_skips} prefills skipped), "
               f"cow copies {pool['cow_copies']}, "
               f"cache bytes {pool['cache_bytes']}")
+    fails = dict(failed=metrics.failed, cancelled=metrics.cancelled,
+                 timed_out=metrics.timed_out, preempted=metrics.preempted,
+                 retried=metrics.retried,
+                 kernel_fallbacks=metrics.kernel_fallbacks)
+    if any(fails.values()):
+        print("  failures: " + ", ".join(
+            f"{k} {v}" for k, v in fails.items() if v))
+    else:
+        print("  failures: none")
     print("sample generations (token ids):")
     for rid in sorted(outs)[:4]:
         print(f"  req {rid}:", outs[rid].tokens[:24].tolist())
@@ -137,6 +147,13 @@ def main() -> None:
                     help="0 = greedy; >0 samples via the Goldschmidt "
                          "softmax")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency bound from arrival; an "
+                         "expired request finishes with reason "
+                         "'deadline' (partial tokens kept)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="retry budget for admission-queue overflow and "
+                         "transient tick failures")
     ap.add_argument("--scheduler", choices=("continuous", "static"),
                     default="continuous")
     ap.add_argument("--pool", choices=("slot", "paged"), default="slot",
@@ -207,7 +224,8 @@ def main() -> None:
     params = api.init(cfg, jax.random.key(args.seed))
     engine = Engine(cfg, params, EngineConfig(
         n_slots=args.batch, s_max=s_max, seed=args.seed, pool=args.pool,
-        page_size=args.page_size, n_pages=args.pages),
+        page_size=args.page_size, n_pages=args.pages,
+        max_retries=args.max_retries),
         mesh=mesh)
     reqs = build_requests(args, cfg, rng)
     if not args.no_warmup:

@@ -326,7 +326,16 @@ def decode_attention(
         cur = cur[:, None, None, None]
     logits = jnp.where(pos <= cur, logits, NEG_INF)
     probs = policy.softmax(logits, axis=-1)
-    o = jnp.einsum("bkgt,btkd->bkgd", probs, kv_dequantize(v_cache))
+    # masked probs underflow to exact fp32 zeros, but 0 * NaN is still
+    # NaN in the V contraction: select the masked V rows to zero so a
+    # stale row beyond cur (e.g. the one NaN KV write a quarantined slot
+    # leaves behind — serving/resilience.py) can never contaminate the
+    # next occupant of a recycled slot or page.  Bit-identical for
+    # finite stale rows (their prob is exactly 0 either way).
+    vmask = jnp.arange(S)[None, :, None, None] <= jnp.reshape(
+        cur, (-1, 1, 1, 1) if cur.ndim else ())
+    o = jnp.einsum("bkgt,btkd->bkgd", probs,
+                   jnp.where(vmask, kv_dequantize(v_cache), 0.0))
     o = constrain(o, "dp", None, None, "model")  # back on the cache layout
     return o.reshape(b, 1, h, hd).astype(q.dtype)
 

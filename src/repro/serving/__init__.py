@@ -10,18 +10,28 @@ Public surface (``__all__``): build an :class:`Engine` over an
 :class:`EngineConfig` (``pool="paged"`` for the block-table cache),
 submit :class:`Request` objects carrying :class:`SamplingParams`, and
 get a :class:`ServeResult` mapping rids to :class:`GenerationResult`.
-Cache pools implement the :class:`CachePool` protocol.
+Cache pools implement the :class:`CachePool` protocol.  Fault tolerance
+(deadlines, cancellation, NaN quarantine, chaos injection) lives in
+:mod:`repro.serving.resilience` and the engine docstring; the
+``FINISH_*`` constants name every terminal ``finish_reason``.
 """
 
+from repro.runtime.failures import (ServeFaultInjector,  # noqa: F401
+                                    TickFailure)
 from repro.serving.cache import (CachePool, PagedCachePool,  # noqa: F401
                                  PrefixHit, SlotCachePool, grow_cache,
                                  make_paged_cache)
 from repro.serving.engine import (Engine, EngineConfig,  # noqa: F401
                                   ServeMetrics, generate_sequential,
                                   prefill_batch)
-from repro.serving.requests import (GenerationResult, Request,  # noqa: F401
+from repro.serving.requests import (FINISH_CANCELLED,  # noqa: F401
+                                    FINISH_DEADLINE, FINISH_LENGTH,
+                                    FINISH_NUMERIC, FINISH_REJECTED,
+                                    FINISH_STOP, GenerationResult, Request,
                                     RequestOutput, RequestState,
                                     SamplingParams, ServeResult)
+from repro.serving.resilience import (AdmissionError,  # noqa: F401
+                                      poison_slot_cache)
 from repro.serving.sampler import sample_tokens  # noqa: F401
 
 __all__ = [
@@ -31,9 +41,14 @@ __all__ = [
     # requests / results
     "Request", "SamplingParams", "GenerationResult", "ServeResult",
     "RequestState", "RequestOutput",  # RequestOutput: legacy alias
+    "FINISH_LENGTH", "FINISH_STOP", "FINISH_DEADLINE", "FINISH_CANCELLED",
+    "FINISH_NUMERIC", "FINISH_REJECTED",
     # cache pools
     "CachePool", "SlotCachePool", "PagedCachePool", "PrefixHit",
     "make_paged_cache",
+    # fault tolerance
+    "AdmissionError", "poison_slot_cache", "ServeFaultInjector",
+    "TickFailure",
     # sampling
     "sample_tokens",
 ]

@@ -458,6 +458,7 @@ class SlotCachePool:
 
     def stats(self) -> dict:
         return {"kind": "slot", "n_slots": self.n_slots, "s_max": self.s_max,
+                "free_slots": len(self._free),
                 "cache_bytes": _tree_bytes(self.cache)}
 
     @staticmethod
@@ -550,6 +551,7 @@ class PagedCachePool:
         self.cow_copies = 0
         self.evictions = 0
         self.peak_pages_in_use = 0
+        self._seized: List[int] = []  # chaos harness: seize_pages()
 
     # -- geometry / accounting --
 
@@ -642,6 +644,35 @@ class PagedCachePool:
         """Drop every prefix-cache entry (releases its page refs)."""
         for k in list(self._index.keys()):
             self._drop_entry(k)
+
+    # -- chaos harness: simulated arena pressure --
+
+    def seize_pages(self, n: int) -> List[int]:
+        """Pin up to ``n`` free pages (ref=1, owned by nobody) so the
+        usable arena shrinks — the fault-injection stand-in for memory
+        pressure / a partially lost arena.  Seized pages are invisible
+        to admission and eviction; ``release_pages`` gives them back."""
+        taken: List[int] = []
+        for _ in range(max(0, int(n))):
+            if not self._free_pages:
+                break
+            pid = self._free_pages.popleft()
+            self.ref[pid] += 1
+            taken.append(pid)
+        self._seized.extend(taken)
+        return taken
+
+    def release_pages(self, pids: Optional[List[int]] = None) -> None:
+        """Return seized pages to the free pool (all of them when
+        ``pids`` is None)."""
+        give = list(self._seized) if pids is None else list(pids)
+        for pid in give:
+            if pid not in self._seized:
+                raise ValueError(f"page {pid} was not seized")
+            self._seized.remove(pid)
+            self.ref[pid] -= 1
+            if self.ref[pid] == 0:
+                self._free_pages.append(pid)
 
     # -- admission --
 
@@ -813,11 +844,15 @@ class PagedCachePool:
     def stats(self) -> dict:
         return {
             "kind": "paged",
+            "n_slots": self.n_slots,
             "page_size": self.page_size,
             "n_pages": self.n_pages,
             "pages_per_slot": self.pages_per_slot,
             "pages_in_use": self.pages_in_use,
             "peak_pages_in_use": self.peak_pages_in_use,
+            "free_pages": len(self._free_pages),
+            "free_slots": len(self._free_slots),
+            "seized_pages": len(self._seized),
             "prefix_entries": len(self._index),
             "prefix_hits": self.prefix_hits,
             "prefix_hit_tokens": self.prefix_hit_tokens,

@@ -70,6 +70,43 @@ diverge from sequential runs when groups fill up — raise
 ``capacity_factor`` for strict parity, as the decode-consistency tests
 do.  Dense / SSM / encdec rows are independent and match token-for-token
 (greedy, fp32).
+
+Fault tolerance
+---------------
+The run loop is built to contain the faults a fleet actually sees
+(serving/resilience.py has the containment model; README the failure
+table):
+
+* **Deadlines** — ``SamplingParams.deadline_ms`` bounds arrival->finish
+  on the engine clock; expiry is checked while queued (zero tokens) and
+  after every tick (partial tokens kept), finishing the request with
+  ``finish_reason="deadline"`` and releasing its slot/pages exactly.
+* **Cancellation** — ``Engine.cancel(rid)`` marks a request; the next
+  tick boundary finishes it with ``finish_reason="cancelled"`` wherever
+  it is (pending/queued/active) with the same exact release.
+* **NaN/Inf quarantine** — with ``numeric_guard`` (default on) the
+  fused tick reduces a per-slot ``all(isfinite(logits))`` flag and
+  folds it into the token array as sentinel ``-1`` (the flag rides the
+  existing per-tick transfer); a tripped slot is freed
+  and failed with ``finish_reason="numeric_error"`` in the same tick,
+  while co-scheduled slots keep token-for-token parity (row-wise math +
+  finite-NEG_INF masking — tests/test_serving_chaos.py).
+* **Backpressure + retries** — ``max_queue`` bounds the admission
+  queue; an arrival that finds it full retries with backoff up to
+  ``max_retries`` times, then fails with ``finish_reason="rejected"``.
+  Scripted tick failures (:class:`~repro.runtime.failures.TickFailure`)
+  retry on the same budget.
+* **Preemption over deadlock** — when the paged arena can't fit the
+  head of line for ``preempt_after_ticks`` consecutive ticks, the
+  youngest active request is preempted (pages freed, re-queued, later
+  replayed from its recorded tokens — the (rid, position) PRNG keying
+  makes stochastic replay exact); if nothing is active and nothing can
+  ever free, the loop raises a typed
+  :class:`~repro.serving.resilience.AdmissionError` with pool stats.
+* **Chaos harness** — ``EngineConfig.injector``
+  (:class:`~repro.runtime.failures.ServeFaultInjector`) scripts tick
+  exceptions, slot NaN poison, arena squeezes and clock skew per tick,
+  deterministic enough to gate unaffected-request parity in CI.
 """
 
 from __future__ import annotations
@@ -85,15 +122,20 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.kernels.tuning import dispatch as _dispatch
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.layers.quant import quantize_params
 from repro.models import api
 from repro.runtime import sharding as shr
+from repro.runtime.failures import TickFailure
 from repro.serving.cache import (CachePool, PagedCachePool, SlotCachePool,
                                  make_paged_cache, remap_kv_leaves)
-from repro.serving.requests import (FINISHED, QUEUED, RUNNING,
+from repro.serving.requests import (FINISH_CANCELLED, FINISH_DEADLINE,
+                                    FINISH_NUMERIC, FINISH_REJECTED,
+                                    FINISHED, QUEUED, RUNNING,
                                     GenerationResult, Request, RequestState,
                                     SamplingParams, ServeResult)
+from repro.serving.resilience import AdmissionError, poison_slot_cache
 from repro.serving.sampler import sample_tokens
 
 SCHEDULERS = ("continuous", "static")
@@ -127,6 +169,13 @@ class EngineConfig:
     page_size: int = 16     # paged: tokens per arena page
     n_pages: int = 0        # paged: arena size; 0 -> worst case + trash
     prefix: str = "exact"   # paged: prefix sharing — exact | pages | off
+    # -- fault tolerance (module docstring, "Fault tolerance") --
+    numeric_guard: bool = True  # per-slot NaN/Inf quarantine in the tick
+    max_queue: int = 0          # bounded admission queue; 0 = unbounded
+    max_retries: int = 2        # submit retries on overflow + tick retries
+    retry_backoff_s: float = 0.01
+    preempt_after_ticks: int = 3  # paged: stalled-head ticks before preempt
+    injector: Optional[Any] = None  # ServeFaultInjector (eq=False: hashable)
 
 
 @dataclasses.dataclass
@@ -146,6 +195,13 @@ class ServeMetrics:
     prefix_hits: int = 0        # admissions served (fully or partly) shared
     prefix_hit_tokens: int = 0  # prompt tokens covered by shared pages
     pool: dict = dataclasses.field(default_factory=dict)  # pool.stats()
+    # -- failure accounting --
+    failed: int = 0        # numeric_error + rejected terminal failures
+    cancelled: int = 0     # Engine.cancel took effect
+    timed_out: int = 0     # deadline_ms expired (queued or mid-decode)
+    preempted: int = 0     # paged preempt-youngest events
+    retried: int = 0       # submit retries + tick retries consumed
+    kernel_fallbacks: int = 0  # pallas->jnp downgrades during this run
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -236,6 +292,17 @@ class Engine:
         self._tick_fns: Dict[tuple, object] = {}
         self._first_fns: Dict[tuple, object] = {}
         self._key = jax.random.key(self.ecfg.seed)
+        self._cancel_rids: set = set()
+        # host-side twin of the tick's validity reduce, for prefill logits
+        self._finite_fn = jax.jit(lambda lg: jnp.all(
+            jnp.isfinite(lg[:, -1, :].astype(jnp.float32))))
+
+    def cancel(self, rid: int) -> None:
+        """Mark ``rid`` for cancellation; the run loop finishes it with
+        ``finish_reason="cancelled"`` at the next tick boundary (pending,
+        queued and active requests alike), releasing its slot/pages
+        exactly.  Unknown rids are ignored at run end."""
+        self._cancel_rids.add(rid)
 
     def _make_pool(self) -> CachePool:
         if self._paged:
@@ -255,11 +322,16 @@ class Engine:
 
     # -- fused jitted steps --------------------------------------------------
 
-    def _tick_fn(self, stochastic: bool, max_top_k: int = 0):
+    def _tick_fn(self, stochastic: bool, max_top_k: int = 0,
+                 guard: bool = False):
         """The fused pool-wide decode tick, compiled per
-        (stochastic, max top-k bound); paged engines thread the block
-        table as one extra device operand."""
-        fkey = (stochastic, max_top_k)
+        (stochastic, max top-k bound, numeric-guard flag); paged engines
+        thread the block table as one extra device operand.  With
+        ``guard`` the tick folds the per-slot
+        ``all(isfinite(final logits))`` reduce into the token array as
+        sentinel ``-1`` — the NaN-quarantine flag rides the existing
+        (n_slots,) transfer, costing only a vocab-width reduce."""
+        fkey = (stochastic, max_top_k, guard)
         if fkey not in self._tick_fns:
             cfg, policy = self.cfg, self._policy
             decode, paged = self._decode, self._paged
@@ -287,30 +359,43 @@ class Engine:
                         cur_index[None, :, None], (3, tokens.shape[0], 1))
                 return step
 
+            def emit(logits, toks):
+                if not guard:
+                    return toks
+                # fold the validity flag into the token array as sentinel
+                # -1 (token ids are always >= 0): the guarded tick keeps
+                # a single (n_slots,) output, so the guard costs one
+                # vocab-width isfinite reduce + a where — no second
+                # device->host transfer, same out_sharding as unguarded
+                valid = jnp.all(
+                    jnp.isfinite(logits[:, -1, :].astype(jnp.float32)),
+                    axis=-1)
+                return jnp.where(valid, toks, -1)
+
             if paged:
                 def tick(params, cache, table, cur_index, tokens, temps,
                          topks, rids, key):
                     logits, cache = decode(params, cache, cur_index,
                                            step_for(tokens, cur_index),
                                            page_table=table)
-                    return sample(logits, cur_index, temps, topks, rids,
-                                  key), cache
+                    return emit(logits, sample(logits, cur_index, temps,
+                                               topks, rids, key)), cache
             else:
                 def tick(params, cache, cur_index, tokens, temps, topks,
                          rids, key):
                     logits, cache = decode(params, cache, cur_index,
                                            step_for(tokens, cur_index))
-                    return sample(logits, cur_index, temps, topks, rids,
-                                  key), cache
+                    return emit(logits, sample(logits, cur_index, temps,
+                                               topks, rids, key)), cache
 
             jit_kw = {}
             if self.mesh is not None:
                 n_ops = 7 if paged else 6
+                repl = NamedSharding(self.mesh, P())
                 jit_kw = dict(
                     in_shardings=(self._param_sh, self._cache_sh) +
                                  (None,) * n_ops,
-                    out_shardings=(NamedSharding(self.mesh, P()),
-                                   self._cache_sh))
+                    out_shardings=(repl, self._cache_sh))
             self._tick_fns[fkey] = jax.jit(
                 tick, donate_argnums=(1,), **jit_kw)
         return self._tick_fns[fkey]
@@ -353,38 +438,74 @@ class Engine:
             raise ValueError(f"request {req.rid}: encdec needs frames")
 
     def _do_prefill(self, st: RequestState, pool: CachePool,
-                    metrics: ServeMetrics, clock) -> None:
+                    metrics: ServeMetrics, clock) -> bool:
+        """Admit ``st`` into a slot.  Returns False when the request was
+        failed instead (non-finite prefill logits under the numeric
+        guard) — the slot is already released.
+
+        A state that carries tokens is a **preemption replay**: its
+        prompt + all-but-the-last recorded token re-prefill as one
+        prompt (same page budget — prompt+gen-1 is invariant — and the
+        same ``cur_index``), the held last token re-enters decode, and
+        no first token is sampled.  The (rid, absolute position) PRNG
+        keying makes the remaining stochastic stream identical to the
+        un-preempted run.
+        """
         req = st.request
         sp = req.sampling
         stochastic = sp.stochastic
+        replay = len(st.tokens) > 0
+        if replay:
+            prompt = (np.concatenate([req.prompt,
+                                      np.asarray(st.tokens[:-1], np.int32)])
+                      if len(st.tokens) > 1 else req.prompt)
+            eff = Request(rid=req.rid, prompt=prompt,
+                          max_new_tokens=(req.max_new_tokens
+                                          - len(st.tokens) + 1),
+                          sampling=sp, frames=req.frames)
+        else:
+            eff = req
         t0 = time.perf_counter()
         # alloc first: a paged pool resolves prefix hits here, and a
         # whole-prompt hit means the prefill never runs at all
-        slot = pool.alloc(req)
+        slot = pool.alloc(eff)
         hit = getattr(slot, "hit", None)
         if hit is not None and hit.skip_prefill:
             logits, states = hit.entry.logits, None
             metrics.prefill_skips += 1
         else:
             logits, states, _ = self._prefill(self.params,
-                                              prefill_batch(self.cfg, req))
-            metrics.prefill_tokens += req.prompt_len
-        first = self._first_fn(stochastic, self._effective_k(req))(
-            logits, jnp.float32(sp.temperature),
-            self._request_key(req.rid, req.prompt_len) if stochastic
-            else self._key)
-        token = int(jax.block_until_ready(first)[0])
+                                              prefill_batch(self.cfg, eff))
+            metrics.prefill_tokens += eff.prompt_len
+        if self.ecfg.numeric_guard and not bool(self._finite_fn(logits)):
+            # poisoned prefill: fail before the write so the prefix
+            # index never caches non-finite logits/states
+            pool.free(int(slot))
+            metrics.prefill_time_s += time.perf_counter() - t0
+            st.reason = FINISH_NUMERIC
+            st.status = FINISHED
+            st.t_finish = clock()
+            metrics.failed += 1
+            return False
+        if not replay:
+            first = self._first_fn(stochastic, self._effective_k(req))(
+                logits, jnp.float32(sp.temperature),
+                self._request_key(req.rid, req.prompt_len) if stochastic
+                else self._key)
+            token = int(jax.block_until_ready(first)[0])
         st.slot = int(slot)
-        pool.write(st.slot, states, req=req, logits=logits)
+        pool.write(st.slot, states, req=eff, logits=logits)
         # settle the graft inside the prefill window so its async device
         # work isn't billed to the next decode tick's timing
         jax.block_until_ready(pool.cache)
         metrics.prefill_time_s += time.perf_counter() - t0
-        st.tokens.append(token)
-        st.t_first_token = clock()
         st.status = RUNNING
-        metrics.first_tokens += 1
-        metrics.ttft_s[req.rid] = st.ttft
+        if not replay:
+            st.tokens.append(token)
+            st.t_first_token = clock()
+            metrics.first_tokens += 1
+            metrics.ttft_s[req.rid] = st.ttft
+        return True
 
     def _finish(self, st: RequestState, pool: CachePool, clock) -> None:
         st.t_finish = clock()
@@ -417,14 +538,22 @@ class Engine:
         for req in requests:
             self._validate(req)
         n = self.ecfg.n_slots
+        guard = self.ecfg.numeric_guard
+        inj = self.ecfg.injector
         pool = self._make_pool()
         max_top_k = max((self._effective_k(r) for r in requests), default=0)
         metrics = ServeMetrics(n_requests=len(requests), n_slots=n)
+        fb_start = _dispatch.fallback_total()
         t_start = time.perf_counter()
-        clock = lambda: time.perf_counter() - t_start  # noqa: E731
+        skew = [0.0]  # injected clock-skew accumulator (list: closure write)
+        clock = lambda: time.perf_counter() - t_start + skew[0]  # noqa: E731
 
         states: List[RequestState] = [
-            RequestState(r, t_arrive=r.arrival_time)
+            RequestState(r, t_arrive=r.arrival_time,
+                         deadline_at=(r.arrival_time
+                                      + r.sampling.deadline_ms / 1e3
+                                      if r.sampling.deadline_ms is not None
+                                      else float("inf")))
             for r in sorted(requests, key=lambda r: (r.arrival_time, r.rid))]
         # deques: the admission loop pops from the head every tick, and a
         # list.pop(0) there is O(n) — quadratic over a long Poisson trace
@@ -441,15 +570,87 @@ class Engine:
         topks = np.zeros(n, np.int32)
         rids = np.zeros(n, np.int32)
 
+        poison_queue: set = set()  # rids awaiting NaN poison (injector)
+        stall = 0                  # consecutive refused-head passes
+        admit_seq = [0]
+
         def admit_arrivals():
             now = clock()
+            requeue: List[RequestState] = []
             while pending and pending[0].t_arrive <= now:
                 st = pending.popleft()
+                if self.ecfg.max_queue and len(ready) >= self.ecfg.max_queue:
+                    # backpressure: the bounded queue is full — retry
+                    # with backoff, then reject
+                    if st.retries < self.ecfg.max_retries:
+                        st.retries += 1
+                        metrics.retried += 1
+                        st.t_arrive = now + self.ecfg.retry_backoff_s
+                        requeue.append(st)
+                    else:
+                        st.status = FINISHED
+                        st.reason = FINISH_REJECTED
+                        st.t_finish = clock()
+                        metrics.failed += 1
+                    continue
                 st.status = QUEUED
                 ready.append(st)
+            if requeue:
+                merged = sorted(list(pending) + requeue,
+                                key=lambda s: (s.t_arrive, s.request.rid))
+                pending.clear()
+                pending.extend(merged)
+
+        def fail_waiting(store: Deque[RequestState], reason: str,
+                         match) -> int:
+            """Terminate matching not-yet-admitted states in place."""
+            hits = 0
+            keep = [s for s in store if not match(s)]
+            for s in store:
+                if match(s):
+                    s.status = FINISHED
+                    s.reason = reason
+                    s.t_finish = clock()
+                    hits += 1
+            store.clear()
+            store.extend(keep)
+            return hits
+
+        def evict(slot: int, reason: Optional[str]) -> RequestState:
+            """Remove an active slot; with a reason, finish its request."""
+            st = active.pop(slot)
+            if reason is not None:
+                st.reason = reason
+            self._finish(st, pool, clock)
+            clear(slot)
+            return st
+
+        def apply_cancels():
+            if not self._cancel_rids:
+                return
+            hit = lambda s: s.request.rid in self._cancel_rids  # noqa: E731
+            metrics.cancelled += fail_waiting(pending, FINISH_CANCELLED, hit)
+            metrics.cancelled += fail_waiting(ready, FINISH_CANCELLED, hit)
+            for slot, st in list(active.items()):
+                if hit(st):
+                    evict(slot, FINISH_CANCELLED)
+                    metrics.cancelled += 1
+
+        def expire_deadlines():
+            now = clock()
+            expired = lambda s: now > s.deadline_at  # noqa: E731
+            metrics.timed_out += fail_waiting(ready, FINISH_DEADLINE,
+                                              expired)
+            for slot, st in list(active.items()):
+                if expired(st):
+                    evict(slot, FINISH_DEADLINE)
+                    metrics.timed_out += 1
 
         def start(st: RequestState):
-            self._do_prefill(st, pool, metrics, clock)
+            if not self._do_prefill(st, pool, metrics, clock):
+                return  # failed at prefill (numeric guard); slot released
+            st.admit_seq = admit_seq[0]
+            admit_seq[0] += 1
             if st.done:  # max_new_tokens == 1: no decode steps at all
                 self._finish(st, pool, clock)
                 return
@@ -467,8 +668,36 @@ class Engine:
             topks[slot] = 0
             rids[slot] = 0
 
+        def preempt_youngest():
+            """Paged graceful degradation: free the most recently admitted
+            request's pages and re-queue it behind the stalled head; its
+            recorded tokens replay at re-admission (see _do_prefill)."""
+            slot, st = max(active.items(),
+                           key=lambda kv: kv[1].admit_seq)
+            del active[slot]
+            pool.free(slot)
+            clear(slot)
+            st.slot = -1
+            st.status = QUEUED
+            metrics.preempted += 1
+            ready.insert(min(1, len(ready)), st)
+
         while pending or ready or active:
+            tick_no = metrics.decode_ticks
+            if inj is not None:
+                ev = inj.events_at(tick_no)
+                if ev:
+                    skew[0] += ev.get("skew", 0.0)
+                    for rid in ev.get("cancel", ()):
+                        self.cancel(rid)
+                    if self._paged and ev.get("squeeze"):
+                        pool.seize_pages(ev["squeeze"])
+                    if self._paged and ev.get("release"):
+                        pool.release_pages()
+                    poison_queue.update(ev.get("poison", ()))
             admit_arrivals()
+            apply_cancels()
+            expire_deadlines()
             admitted = 0
             if scheduler == "continuous":
                 budget = self.ecfg.max_prefill_per_tick
@@ -483,37 +712,87 @@ class Engine:
                         start(ready.popleft())
                         admitted += 1
 
+            head_stuck = (ready and not admitted
+                          and not pool.can_admit(ready[0].request))
+            stall = stall + 1 if (head_stuck and active
+                                  and scheduler == "continuous") else 0
+            if (self._paged and active
+                    and stall >= self.ecfg.preempt_after_ticks):
+                preempt_youngest()
+                stall = 0
+                continue  # retry admission before burning a tick
+
             if not active:
                 if ready and not pending and not admitted:
                     # nothing running, nothing arriving, nothing admitted
                     # this pass, head-of-line refused: the pool can never
                     # satisfy it
-                    raise RuntimeError(
-                        f"request {ready[0].request.rid} cannot be "
-                        f"admitted and no active request can unblock it "
-                        f"(pool: {pool.stats()})")
+                    raise AdmissionError(
+                        ready[0].request.rid, pool.stats(),
+                        queued=[s.request.rid for s in ready],
+                        pages_needed=(
+                            {s.request.rid: pool.pages_needed(s.request)
+                             for s in ready} if self._paged else None))
                 if pending:  # idle until the next arrival
                     time.sleep(max(0.0, min(
                         pending[0].t_arrive - clock(), 0.005)))
                 continue
 
+            if poison_queue:
+                by_rid = {st.request.rid: slot
+                          for slot, st in active.items()}
+                for rid in sorted(poison_queue):
+                    if rid in by_rid:
+                        poison_slot_cache(pool, by_rid[rid])
+                        poison_queue.discard(rid)
+
             stochastic = bool(np.any(temps[list(active)] > 0))
-            tick = self._tick_fn(stochastic, max_top_k)
+            tick = self._tick_fn(stochastic, max_top_k, guard)
             operands = (jnp.asarray(cur), jnp.asarray(last_tok[:, None]),
                         jnp.asarray(temps), jnp.asarray(topks),
                         jnp.asarray(rids), self._key)
+            attempts = 0
             t0 = time.perf_counter()
-            if self._paged:
-                nxt, pool.cache = tick(self.params, pool.cache,
-                                       jnp.asarray(pool.table), *operands)
-            else:
-                nxt, pool.cache = tick(self.params, pool.cache, *operands)
-            nxt = np.asarray(jax.block_until_ready(nxt))
+            while True:
+                try:
+                    if inj is not None and inj.take_failure(tick_no):
+                        raise TickFailure(
+                            f"injected tick failure at tick {tick_no}")
+                    if self._paged:
+                        out, pool.cache = tick(self.params, pool.cache,
+                                               jnp.asarray(pool.table),
+                                               *operands)
+                    else:
+                        out, pool.cache = tick(self.params, pool.cache,
+                                               *operands)
+                    break
+                except TickFailure:
+                    # transient device error: retry the identical tick
+                    # (the injected raise precedes the call, so the
+                    # donated cache was never consumed)
+                    if attempts >= self.ecfg.max_retries:
+                        raise
+                    attempts += 1
+                    metrics.retried += 1
+                    time.sleep(self.ecfg.retry_backoff_s)
+            nxt = np.asarray(jax.block_until_ready(out))
+            # guarded ticks encode a tripped slot as sentinel token -1
+            valid = (nxt >= 0) if guard else None
             metrics.decode_time_s += time.perf_counter() - t0
             metrics.decode_ticks += 1
             metrics.occupancy_ticks += len(active)
+
+            if valid is not None:
+                # quarantine: fail poisoned slots NOW — their garbage
+                # token is never appended, their (masked, soon to be
+                # recycled) cache rows free this tick
+                for slot in list(active):
+                    if not valid[slot]:
+                        evict(slot, FINISH_NUMERIC)
+                        metrics.failed += 1
             metrics.decode_tokens += len(active)
 
+            now = clock()
             for slot in list(active):
                 st = active[slot]
                 st.tokens.append(int(nxt[slot]))
@@ -521,13 +800,16 @@ class Engine:
                     # Under 'static' the freed slot stays unused (and its
                     # lane keeps burning in every tick) until the whole
                     # group drains — admission is gated on `not active`.
-                    del active[slot]
-                    self._finish(st, pool, clock)
-                    clear(slot)
+                    evict(slot, None)
+                elif now > st.deadline_at:
+                    evict(slot, FINISH_DEADLINE)
+                    metrics.timed_out += 1
                 else:
                     cur[slot] = st.cur_index
                     last_tok[slot] = st.tokens[-1]
 
+        self._cancel_rids.clear()
+        metrics.kernel_fallbacks = _dispatch.fallback_total() - fb_start
         metrics.makespan_s = clock()
         stats = pool.stats()
         metrics.pool = stats
@@ -540,7 +822,7 @@ class Engine:
                 rid=st.request.rid,
                 prompt_len=st.request.prompt_len,
                 tokens=np.asarray(st.tokens, np.int32),
-                ttft_s=st.ttft,
+                ttft_s=st.ttft if st.tokens else 0.0,
                 finish_s=st.t_finish - st.t_arrive,
                 finish_reason=st.finish_reason,
                 metrics=metrics,
@@ -582,6 +864,11 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
 
     Sampling knobs come from ``request.sampling``; the ``top_k`` kwarg
     is a deprecated fallback used only when the request carries none.
+    ``sampling.deadline_ms`` is honored on a local wall clock from call
+    start (the sequential twin of the engine's arrival clock): an
+    expired request stops where it is — possibly with zero tokens —
+    with ``finish_reason="deadline"``, so finish reasons stay
+    comparable across the two paths.
     Returns a :class:`GenerationResult` (array-like: ``np.asarray`` of
     it is the token vector, as before).
     """
@@ -596,6 +883,9 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
     temp = float(sp.temperature)
     k = sp.top_k or top_k
     base = jax.random.key(seed)
+    t0 = time.perf_counter()
+    deadline = (t0 + sp.deadline_ms / 1e3 if sp.deadline_ms is not None
+                else float("inf"))
 
     def tok_key(pos: int):
         if temp == 0.0:
@@ -603,6 +893,17 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
         return jax.random.fold_in(
             jax.random.fold_in(base, jnp.int32(request.rid)), jnp.int32(pos))
 
+    from repro.serving.requests import (FINISH_DEADLINE, FINISH_LENGTH,
+                                        FINISH_STOP)
+
+    def result(out, reason):
+        return GenerationResult(
+            rid=request.rid, prompt_len=request.prompt_len,
+            tokens=np.asarray(out, np.int32), ttft_s=0.0,
+            finish_s=time.perf_counter() - t0, finish_reason=reason)
+
+    if time.perf_counter() > deadline:
+        return result([], FINISH_DEADLINE)
     logits, states, _ = prefill(params, prefill_batch(cfg, request))
     cache = SlotCachePool.grow(cfg, states, 1, s_max, jnp.dtype(cfg.dtype))
     out = [int(sample_tokens(logits[:, -1, :], policy=policy, top_k=k,
@@ -612,6 +913,8 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
     for i in range(request.max_new_tokens - 1):
         if stopped:
             break
+        if time.perf_counter() > deadline:
+            return result(out, FINISH_DEADLINE)
         cur = jnp.int32(request.prompt_len + i)
         step = {"token": jnp.asarray([[out[-1]]], jnp.int32)}
         if cfg.pos == "mrope":
@@ -622,8 +925,6 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
             lg[:, -1, :], policy=policy, top_k=k, temperature=temp,
             key=tok_key(request.prompt_len + i + 1))[0]))
         stopped = out[-1] == sp.stop
-    from repro.serving.requests import FINISH_LENGTH, FINISH_STOP
-    return GenerationResult(
-        rid=request.rid, prompt_len=request.prompt_len,
-        tokens=np.asarray(out, np.int32), ttft_s=0.0, finish_s=0.0,
-        finish_reason=FINISH_STOP if stopped else FINISH_LENGTH)
+    # a request that completes is "length"/"stop" even if it also just
+    # expired — same tie-break as the engine's post-tick check
+    return result(out, FINISH_STOP if stopped else FINISH_LENGTH)

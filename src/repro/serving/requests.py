@@ -27,8 +27,12 @@ QUEUED = "queued"      # admitted, waiting for a free slot
 RUNNING = "running"    # prefilled into a slot, decoding
 FINISHED = "finished"  # generation budget exhausted, slot freed
 
-FINISH_LENGTH = "length"  # max_new_tokens exhausted
-FINISH_STOP = "stop"      # sampled the stop token
+FINISH_LENGTH = "length"        # max_new_tokens exhausted
+FINISH_STOP = "stop"            # sampled the stop token
+FINISH_DEADLINE = "deadline"    # deadline_ms expired (queued or mid-decode)
+FINISH_CANCELLED = "cancelled"  # Engine.cancel(rid) took effect
+FINISH_NUMERIC = "numeric_error"  # NaN/Inf logits: slot quarantined
+FINISH_REJECTED = "rejected"    # bounded admission queue, retries exhausted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,18 +43,27 @@ class SamplingParams:
     softmax.  ``top_k == 0`` means full vocab; per-request values are
     honored inside the fused tick (rows carry their own k).  ``stop``
     ends generation early when that token id is sampled (it is included
-    in the output; finish_reason becomes "stop").
+    in the output; finish_reason becomes "stop").  ``deadline_ms``
+    bounds the request's total latency, measured from its arrival on
+    the engine clock: an expired request is failed with
+    finish_reason "deadline" whether it is still queued (zero tokens)
+    or mid-decode (partial tokens kept); ``generate_sequential``
+    honors the same semantics so finish reasons stay comparable.
     """
 
     temperature: float = 0.0
     top_k: int = 0
     stop: Optional[int] = None
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.temperature < 0:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0, got {self.deadline_ms}")
 
     @property
     def stochastic(self) -> bool:
@@ -106,7 +119,15 @@ class Request:
 
 @dataclasses.dataclass
 class RequestState:
-    """Engine-side view of one in-flight request."""
+    """Engine-side view of one in-flight request.
+
+    ``reason`` overrides the derived ``finish_reason`` for terminal
+    failure paths (deadline / cancelled / numeric_error / rejected) —
+    the status still progresses to FINISHED so the engine's exit
+    invariant holds for every request.  ``deadline_at`` is the absolute
+    engine-clock expiry (inf when the request has no deadline) — fixed
+    at submit time so retry backoff can't stretch the deadline.
+    """
 
     request: Request
     status: str = QUEUED
@@ -115,6 +136,10 @@ class RequestState:
     t_arrive: float = 0.0       # engine-clock seconds
     t_first_token: float = 0.0
     t_finish: float = 0.0
+    reason: Optional[str] = None
+    retries: int = 0            # submit-side retries consumed so far
+    admit_seq: int = -1         # admission order (preemption picks max)
+    deadline_at: float = float("inf")
 
     @property
     def cur_index(self) -> int:
@@ -132,6 +157,8 @@ class RequestState:
 
     @property
     def finish_reason(self) -> str:
+        if self.reason is not None:
+            return self.reason
         stop = self.request.sampling.stop
         if (stop is not None and self.tokens and self.tokens[-1] == stop
                 and len(self.tokens) <= self.request.max_new_tokens):

@@ -1,0 +1,120 @@
+"""Fault tolerance for the serving runtime.
+
+The training side survives chip loss through the driver's
+restore-and-resume loop (runtime/driver.py + runtime/failures.py); this
+module is the serving twin — the pieces that let ``Engine.run`` contain
+a fault instead of corrupting or deadlocking the whole pool:
+
+* :class:`AdmissionError` — the typed replacement for the engine's bare
+  deadlock guard, carrying pool stats and the queued requests' page
+  needs so an operator can see *why* the head of line can never fit.
+* :func:`poison_slot_cache` — write NaN into one slot's KV rows, the
+  chaos-harness primitive behind the NaN-quarantine tests (and the
+  honest simulation of a Goldschmidt iteration blowing up in a narrow
+  fixed-point margin: the error surfaces as non-finite activations).
+
+Containment model for a poisoned slot (why quarantine is sound):
+
+* **Detection** — the fused tick reduces a per-slot validity flag from
+  the final logits (``all(isfinite(logits[slot]))``); only the
+  ``(n_slots,)`` bools cross to the host, so the guard rides the
+  existing device->host transfer and costs one vocab-width reduce.
+* **Blast radius** — attention, norms and sampling are row-wise, so a
+  NaN row cannot touch co-scheduled slots' logits; the decode mask is a
+  ``jnp.where(pos <= cur, logits, NEG_INF)`` select with *finite*
+  NEG_INF (layers/attention.py), so NaN parked at masked positions
+  never propagates either.
+* **Cache writes** — the host quarantines the slot in the same tick the
+  flag trips: at most one NaN KV write (position ``cur+1``) lands
+  before the slot is freed.  That write sits beyond every reader's
+  ``cur`` and is overwritten before it is ever unmasked — the exact
+  invariant slot recycling already relies on — so no explicit device-
+  side write suppression is needed.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class AdmissionError(RuntimeError):
+    """The head-of-line request can never be admitted: the pool is idle
+    (nothing active to drain) and the request's slot/page needs exceed
+    what the pool can free.
+
+    Attributes: ``rid`` (the stuck head of line), ``pool_stats`` (the
+    pool's ``stats()`` dict at raise time), ``queued`` (rids still
+    waiting, head first), ``pages_needed`` (rid -> page budget, paged
+    pools only).
+    """
+
+    def __init__(self, rid: int, pool_stats: dict,
+                 queued: Sequence[int] = (),
+                 pages_needed: Optional[Dict[int, int]] = None):
+        self.rid = rid
+        self.pool_stats = dict(pool_stats)
+        self.queued = list(queued)
+        self.pages_needed = dict(pages_needed or {})
+        parts = [f"request {rid} cannot be admitted and no active "
+                 f"request can unblock it"]
+        free = {k: v for k, v in self.pool_stats.items()
+                if k in ("free_slots", "free_pages", "n_slots", "n_pages",
+                         "page_size", "seized_pages", "kind")}
+        parts.append(f"pool: {free}")
+        parts.append(f"queued rids: {self.queued}")
+        if self.pages_needed:
+            parts.append(f"pages needed: {self.pages_needed}")
+        super().__init__("; ".join(parts))
+
+
+def poison_slot_cache(pool, slot: int) -> None:
+    """Write NaN into sequence position 0 of ``slot``'s KV rows.
+
+    Position 0 is attended by every decode step of the slot
+    (``pos <= cur`` always covers it), so the very next tick's logits
+    for that row go non-finite and the validity guard trips.  For a
+    paged pool the write lands in the slot's first page — sharers of
+    that page (prefix sharing) are poisoned too, which is the honest
+    fault model: corruption does not respect sharing boundaries.
+
+    Float KV arenas only: an int8 arena has no NaN encoding (the
+    quantized datapath would need a scale-poison instead), so poisoning
+    one raises ``ValueError``.
+    """
+    from repro.serving.cache import (_PAGED_LEAVES, _leaf_name,
+                                     PagedCachePool)
+
+    paged = isinstance(pool, PagedCachePool)
+    if paged:
+        pages = pool._slot_pages[slot]
+        if not pages:
+            raise ValueError(f"slot {slot} holds no pages (inactive?)")
+        pid = int(pages[0])
+    touched = []
+
+    def one(path, a):
+        if _leaf_name(path) not in _PAGED_LEAVES:
+            return a
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            raise ValueError(
+                f"cannot poison non-float KV arena (dtype {a.dtype}); "
+                "int8 KV has no NaN encoding")
+        touched.append(True)
+        if paged:
+            return a.at[:, pid, 0].set(jnp.nan)
+        return a.at[:, slot, 0].set(jnp.nan)
+
+    cache = jax.tree_util.tree_map_with_path(one, pool.cache)
+    if not touched:
+        raise ValueError("pool cache has no KV leaves to poison")
+    if getattr(pool, "shardings", None) is not None:
+        # .at[].set on a sharded arena may relayout; re-pin so the next
+        # tick's pinned in_shardings see the cache where they expect it
+        cache = jax.device_put(cache, pool.shardings)
+    pool.cache = cache
+
+
+__all__ = ["AdmissionError", "poison_slot_cache"]
