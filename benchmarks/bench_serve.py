@@ -48,6 +48,15 @@ single-request runs.  Writes ``BENCH_serve.json``:
 * ``resilience`` — numeric-guard overhead: min-of-repeats pooled
   per-tick cost with ``EngineConfig.numeric_guard`` on vs off over the
   same trace; the gate asserts the guarded tick costs <= 5% more
+* ``latency`` — the real TTFT and inter-token-latency distributions
+  (count/mean/min/max/p50/p95/p99) per scheduler, from the sample lists
+  ``ServeMetrics`` now carries; the gate asserts the sample counts
+  reconcile with the token counts (one ITL sample per decoded token,
+  one TTFT sample per first token)
+* ``obs`` — request-lifecycle tracing overhead (same min-of-repeats
+  protocol, traced engine vs untraced, gated <= 5%) plus the
+  structural gates: every request's span chain closes with the engine's
+  finish reason and the Chrome-trace export is Perfetto-loadable
 * ``checks``      — the CI gate: parity vs sequential (slot AND paged),
   continuous ticks not above static ticks (with slack), continuous
   occupancy not below static (with slack), the paged byte budget,
@@ -79,6 +88,10 @@ QUANT_BYTES_BUDGET = 0.55       # int8 params+cache vs the analytic bf16 pair
 QUANT_DIVERGENCE_BUDGET = 0.25  # int8-vs-fp32 greedy token drift allowance
 RESILIENCE_OVERHEAD_BUDGET = 1.05  # numeric-guard tick cost vs guard-off
 RESILIENCE_REPEATS = 4             # min-of-N pooled tick costs (CPU noise)
+OBS_OVERHEAD_BUDGET = 1.05  # tracing-on tick cost vs tracing-off
+OBS_REPEATS = 6             # min-of-N pooled tick costs (CPU noise; the
+                            # true delta is a few host-side appends, so
+                            # extra repeats purely de-noise the min)
 
 
 def build_trace(cfg, n_requests: int, prompt_hi: int, gen_hi: int,
@@ -270,6 +283,44 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
     tick_on, tick_off = min(tick_cost[True]), min(tick_cost[False])
     resilience_overhead = tick_on / max(tick_off, 1e-12)
 
+    # obs leg: request-lifecycle tracing (repro.obs) must cost <= 5% per
+    # tick over the identical untraced engine.  The tracer records a few
+    # host-side tuple appends per tick — no device work, no extra
+    # device->host transfer — so the pooled per-tick cost is the honest
+    # place to look for its overhead.  Same protocol as the resilience
+    # leg: interleaved repeats, min-of-N.  The final traced run then
+    # feeds the structural gates: every request's span chain must close
+    # with the finish reason the engine reported, and the Chrome-trace
+    # export must be structurally valid (Perfetto-loadable).
+    from repro.obs import Tracer, to_chrome_trace, validate_chains, \
+        validate_chrome_trace
+
+    obs_tracer = Tracer()
+    obs_engine = Engine(cfg, params,
+                        EngineConfig(n_slots=n_slots, s_max=engine.s_max,
+                                     tracer=obs_tracer), mesh=mesh)
+    obs_engine.warmup(sorted({r.prompt_len for r in reqs}))
+    obs_cost = {"traced": [], "plain": []}
+    for _ in range(OBS_REPEATS):
+        for name, e in (("traced", obs_engine),
+                        ("plain", res_engines[True])):
+            _, m = e.run(reqs)
+            obs_cost[name].append(m.decode_time_s / max(m.decode_ticks, 1))
+    obs_on, obs_off = min(obs_cost["traced"]), min(obs_cost["plain"])
+    obs_overhead = obs_on / max(obs_off, 1e-12)
+
+    obs_tracer.clear()  # keep only the validation run's events
+    obs_outs, obs_m = obs_engine.run(reqs)
+    chain_problems = validate_chains(
+        obs_tracer, expect={r.rid: obs_outs[r.rid].finish_reason
+                            for r in reqs})
+    export_problems = validate_chrome_trace(
+        to_chrome_trace(obs_tracer, {"metrics": obs_m.to_dict()}))
+    latency_counts_ok = (
+        len(cont_m.itl_samples) == cont_m.decode_tokens
+        and len(cont_m.ttft_samples) == cont_m.first_tokens
+        and len(obs_m.itl_samples) == obs_m.decode_tokens)
+
     # scheduler-independent costs, pooled across both runs (see docstring)
     pooled_tick_s = ((cont_m.decode_time_s + static_m.decode_time_s)
                      / max(cont_m.decode_ticks + static_m.decode_ticks, 1))
@@ -298,6 +349,10 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
         "quant_pool_parity_ok": quant_pool_parity_ok,
         "resilience_overhead_ok": (resilience_overhead
                                    <= RESILIENCE_OVERHEAD_BUDGET),
+        "obs_overhead_ok": obs_overhead <= OBS_OVERHEAD_BUDGET,
+        "obs_spans_ok": not chain_problems,
+        "obs_export_ok": not export_problems,
+        "latency_ok": latency_counts_ok,
     }
     rec = {
         "smoke": smoke,
@@ -330,6 +385,21 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
             "tick_us_guard_off": tick_off * 1e6,
             "overhead_ratio": resilience_overhead,
             "budget": RESILIENCE_OVERHEAD_BUDGET,
+        },
+        "latency": {
+            "continuous": {"ttft": cont_m.ttft_summary,
+                           "itl": cont_m.itl_summary},
+            "static": {"ttft": static_m.ttft_summary,
+                       "itl": static_m.itl_summary},
+        },
+        "obs": {
+            "tick_us_traced": obs_on * 1e6,
+            "tick_us_plain": obs_off * 1e6,
+            "overhead_ratio": obs_overhead,
+            "budget": OBS_OVERHEAD_BUDGET,
+            "events": len(obs_tracer),
+            "chain_problems": chain_problems,
+            "export_problems": export_problems,
         },
         "tick_speedup": static_m.decode_ticks / max(cont_m.decode_ticks, 1),
         "tok_s_speedup": (cont_m.aggregate_tok_per_s

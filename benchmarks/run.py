@@ -113,6 +113,24 @@ def main() -> None:
               f"\"numeric guard x{rs['overhead_ratio']:.3f} per tick "
               f"(off: {rs['tick_us_guard_off']:.1f} us, "
               f"budget x{rs['budget']:.2f})\"")
+        lat = rec["latency"]["continuous"]
+        print(f"serve_latency,{lat['ttft']['p50'] * 1e6:.1f},"
+              f"\"continuous TTFT ms p50/p95/p99 "
+              f"{lat['ttft']['p50'] * 1e3:.2f}/"
+              f"{lat['ttft']['p95'] * 1e3:.2f}/"
+              f"{lat['ttft']['p99'] * 1e3:.2f}, "
+              f"ITL {lat['itl']['p50'] * 1e3:.2f}/"
+              f"{lat['itl']['p95'] * 1e3:.2f}/"
+              f"{lat['itl']['p99'] * 1e3:.2f} "
+              f"({lat['itl']['count']} samples)\"")
+        ob = rec["obs"]
+        print(f"serve_obs,{ob['tick_us_traced']:.1f},"
+              f"\"tracing x{ob['overhead_ratio']:.3f} per tick "
+              f"(off: {ob['tick_us_plain']:.1f} us, "
+              f"budget x{ob['budget']:.2f}), "
+              f"{ob['events']} events, "
+              f"chain_problems={len(ob['chain_problems'])}, "
+              f"export_problems={len(ob['export_problems'])}\"")
         print(f"# wrote {args.json or DEFAULT_SERVE_JSON}", file=sys.stderr)
         if args.check and not rec["ok"]:
             for name, ok in rec["checks"].items():

@@ -34,6 +34,9 @@ ENV_FALLBACK = "REPRO_KERNEL_FALLBACK"
 _enabled_override: Optional[bool] = None
 _fallback_override: Optional[bool] = None
 _fallback_counts: Counter = Counter()
+_resolve_counts: Counter = Counter()
+_tune_hits: Counter = Counter()
+_tune_misses: Counter = Counter()
 
 
 def interpret_default() -> bool:
@@ -89,6 +92,49 @@ def fallback_total() -> int:
 
 def reset_fallback_stats() -> None:
     _fallback_counts.clear()
+
+
+# -- dispatch-layer observability --------------------------------------------
+# Per-kernel counters the serving metrics and obsview attribute against:
+# how often each kernel's launch config was resolved (trace-time: one
+# resolution per call site per compilation — a warm jit cache resolves
+# nothing, so this counts lowerings, not executions), and whether the
+# autotune cache answered (hit) or fell through to registry defaults
+# (miss) when tuning was enabled.  Fallback counts (above) complete the
+# per-kernel picture: resolved -> tuned-or-default -> ran-or-downgraded.
+
+
+def dispatch_snapshot() -> Dict[str, Dict[str, int]]:
+    """Copy of every per-kernel dispatch counter; diff two snapshots
+    with :func:`dispatch_delta` to attribute one run's activity."""
+    return {
+        "resolves": dict(_resolve_counts),
+        "tune_hits": dict(_tune_hits),
+        "tune_misses": dict(_tune_misses),
+        "fallbacks": dict(_fallback_counts),
+    }
+
+
+def dispatch_delta(start: Dict[str, Dict[str, int]],
+                   end: Optional[Dict[str, Dict[str, int]]] = None,
+                   ) -> Dict[str, Dict[str, int]]:
+    """Per-kernel counter deltas since ``start`` (zero entries dropped);
+    ``end`` defaults to a fresh snapshot."""
+    end = end if end is not None else dispatch_snapshot()
+    out: Dict[str, Dict[str, int]] = {}
+    for section, counts in end.items():
+        base = start.get(section, {})
+        d = {k: v - base.get(k, 0) for k, v in counts.items()
+             if v - base.get(k, 0)}
+        out[section] = d
+    return out
+
+
+def reset_dispatch_stats() -> None:
+    """Clear resolve/tune counters (fallbacks have their own reset)."""
+    _resolve_counts.clear()
+    _tune_hits.clear()
+    _tune_misses.clear()
 
 
 def call_with_fallback(kernel: str, primary: Callable[[], Any],
@@ -172,9 +218,11 @@ def resolve(
     (e.g. ``iters=policy.iters``) verbatim."""
     spec = registry.get_spec(kernel)
     cfg = dict(spec.defaults)
+    _resolve_counts[kernel] += 1
     if tuning_enabled():
         key = cache_mod.cache_key(kernel, shape, dtype, jax.default_backend())
         entry = cache_mod.get_cache().get(key)
+        (_tune_hits if entry is not None else _tune_misses)[kernel] += 1
         if entry is not None:
             tuned = entry.get("config", {})
             # Unknown keys in a stale/foreign cache entry must not reach

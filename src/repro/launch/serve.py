@@ -101,9 +101,15 @@ def report(outs, metrics, scheduler: str) -> None:
         print("  decode: no steps (every request finished at prefill; "
               "gen budget 1)")
     if ttfts:
-        print(f"  TTFT ms: min {ttfts[0] * 1e3:.1f} / "
-              f"median {ttfts[len(ttfts) // 2] * 1e3:.1f} / "
-              f"max {ttfts[-1] * 1e3:.1f}")
+        t = metrics.ttft_summary
+        print(f"  TTFT ms: min {t['min'] * 1e3:.1f} / "
+              f"p50 {t['p50'] * 1e3:.1f} / p95 {t['p95'] * 1e3:.1f} / "
+              f"p99 {t['p99'] * 1e3:.1f} / max {t['max'] * 1e3:.1f}")
+    if metrics.itl_samples:
+        i = metrics.itl_summary
+        print(f"  ITL ms ({i['count']} samples): "
+              f"p50 {i['p50'] * 1e3:.1f} / p95 {i['p95'] * 1e3:.1f} / "
+              f"p99 {i['p99'] * 1e3:.1f}")
     pool = metrics.pool
     if pool.get("kind") == "paged":
         print(f"  pages: {pool['peak_pages_in_use']}/{pool['n_pages']} peak "
@@ -122,6 +128,10 @@ def report(outs, metrics, scheduler: str) -> None:
             f"{k} {v}" for k, v in fails.items() if v))
     else:
         print("  failures: none")
+    if metrics.kernel_fallbacks_by_kernel:
+        print("  kernel fallbacks: " + ", ".join(
+            f"{k} {v}" for k, v in
+            sorted(metrics.kernel_fallbacks_by_kernel.items())))
     print("sample generations (token ids):")
     for rid in sorted(outs)[:4]:
         print(f"  req {rid}:", outs[rid].tokens[:24].tolist())
@@ -175,6 +185,11 @@ def main() -> None:
                          "'DxM', 'data=D,model=M', a bare TP width 'M', "
                          "or 'auto' (TP over every device); default: "
                          "single-device engine")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the request-lifecycle trace and write it "
+                         "here: '.jsonl' = line-delimited event log, "
+                         "anything else = Chrome-trace JSON loadable in "
+                         "ui.perfetto.dev")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the pre-compile pass; reported TTFT then "
                          "includes one-time jit compilation")
@@ -220,12 +235,17 @@ def main() -> None:
         print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} "
               f"{mesh.devices.flat[0].platform} devices")
 
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
     rng = np.random.RandomState(args.seed)
     params = api.init(cfg, jax.random.key(args.seed))
     engine = Engine(cfg, params, EngineConfig(
         n_slots=args.batch, s_max=s_max, seed=args.seed, pool=args.pool,
         page_size=args.page_size, n_pages=args.pages,
-        max_retries=args.max_retries),
+        max_retries=args.max_retries, tracer=tracer),
         mesh=mesh)
     reqs = build_requests(args, cfg, rng)
     if not args.no_warmup:
@@ -233,8 +253,21 @@ def main() -> None:
         # reported TTFT/tok-s measure serving, not one-time XLA lowering
         engine.warmup(sorted({r.prompt_len for r in reqs}),
                       stochastic=args.temperature > 0)
+        if tracer is not None:
+            tracer.clear()  # warmup spans are compilation, not serving
     outs, metrics = engine.run(reqs, scheduler=args.scheduler)
     report(outs, metrics, args.scheduler)
+    if tracer is not None:
+        from repro.obs import write_chrome_trace, write_jsonl
+
+        meta = {"arch": args.arch, "scheduler": args.scheduler,
+                "metrics": metrics.to_dict()}
+        writer = (write_jsonl if args.trace_out.endswith(".jsonl")
+                  else write_chrome_trace)
+        writer(args.trace_out, tracer, metadata=meta)
+        print(f"trace: {len(tracer)} events -> {args.trace_out} "
+              f"(dropped {tracer.dropped}); view with "
+              f"'python -m repro.launch.obsview {args.trace_out}'")
 
 
 if __name__ == "__main__":

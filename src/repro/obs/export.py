@@ -1,0 +1,336 @@
+"""Trace export: JSONL event log + Chrome-trace/Perfetto JSON.
+
+Two interchangeable on-disk forms of one :class:`~repro.obs.trace.Tracer`
+buffer:
+
+* **JSONL** (``*.jsonl``) — one JSON object per line (header, events,
+  footer), the grep/stream-friendly log form.  The footer carries the
+  ring-buffer drop count and any caller metadata (e.g. the run's
+  ``ServeMetrics.to_dict()``), so a truncated trace is self-describing.
+* **Chrome trace** (``*.json``) — the Trace Event Format dict
+  (``{"traceEvents": [...]}``) that ``ui.perfetto.dev`` and
+  ``chrome://tracing`` load directly: one process per track group
+  (requests / slots / engine / pool), one thread per request and per
+  slot, ``X`` complete events for spans, ``i`` instants, ``C``
+  counter tracks.  Timestamps are microseconds on the engine clock.
+
+:func:`load_events` reads either form back into the internal tuple
+stream, so ``obsview`` and tests are format-agnostic.  The validators
+back the ``obs-smoke`` CI gate: :func:`validate_chrome_trace` checks
+the export is structurally loadable, :func:`validate_chains` checks
+every request's lifecycle span chain closed with the right
+``finish_reason``.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.trace import COUNTER, INSTANT, SPAN, Tracer
+
+# stable pid assignment per track group; unknown groups go after these
+_PID_ORDER = ("req", "slot", "engine", "pool")
+_GROUP_LABEL = {"req": "requests", "slot": "slots", "engine": "engine",
+                "pool": "pool"}
+
+# finish reasons that imply the request actually generated tokens (so
+# its chain must include prefill + first_token; decode when > 1 token)
+_GENERATED_REASONS = ("length", "stop")
+
+
+def _events_of(tracer_or_events) -> Tuple[Sequence[tuple], int]:
+    if isinstance(tracer_or_events, Tracer):
+        return list(tracer_or_events.events), tracer_or_events.dropped
+    return list(tracer_or_events), 0
+
+
+def _pid_map(events: Sequence[tuple]) -> Dict[str, int]:
+    groups = []
+    for g in _PID_ORDER:
+        groups.append(g)
+    for ev in events:
+        g = ev[2][0]
+        if g not in groups:
+            groups.append(g)
+    return {g: i + 1 for i, g in enumerate(groups)}
+
+
+def to_chrome_trace(tracer_or_events,
+                    metadata: Optional[dict] = None) -> dict:
+    """Convert a tracer (or raw event list) to the Chrome Trace Event
+    Format dict.  ``metadata`` lands under ``otherData`` (Perfetto shows
+    it in trace info; ``obsview`` reads the metrics summary from it)."""
+    events, dropped = _events_of(tracer_or_events)
+    pids = _pid_map(events)
+    out: List[dict] = []
+    seen_tracks = set()
+    for g, pid in pids.items():
+        out.append({"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                    "args": {"name": _GROUP_LABEL.get(g, g)}})
+    for ev in events:
+        kind, name, track = ev[0], ev[1], ev[2]
+        pid, tid = pids[track[0]], int(track[1])
+        if track not in seen_tracks and track[0] in ("req", "slot"):
+            seen_tracks.add(track)
+            out.append({"name": "thread_name", "ph": "M", "pid": pid,
+                        "tid": tid,
+                        "args": {"name": f"{track[0]} {tid}"}})
+        if kind == SPAN:
+            _, _, _, t0, dur, args = ev
+            out.append({"name": name, "ph": "X", "pid": pid, "tid": tid,
+                        "ts": t0 * 1e6, "dur": max(dur, 0.0) * 1e6,
+                        "args": args or {}})
+        elif kind == INSTANT:
+            _, _, _, t, args = ev
+            out.append({"name": name, "ph": "i", "s": "t", "pid": pid,
+                        "tid": tid, "ts": t * 1e6, "args": args or {}})
+        else:  # COUNTER
+            _, _, _, t, value = ev
+            out.append({"name": name, "ph": "C", "pid": pid, "tid": tid,
+                        "ts": t * 1e6, "args": {name: value}})
+    other = dict(metadata or {})
+    other["dropped_events"] = dropped
+    return {"traceEvents": out, "displayTimeUnit": "ms",
+            "otherData": other}
+
+
+def write_chrome_trace(path: str, tracer_or_events,
+                       metadata: Optional[dict] = None) -> dict:
+    obj = to_chrome_trace(tracer_or_events, metadata)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
+def write_jsonl(path: str, tracer_or_events,
+                metadata: Optional[dict] = None) -> int:
+    """One JSON object per line: header, events in record order, footer
+    (drop count + metadata).  Returns the number of event lines."""
+    events, dropped = _events_of(tracer_or_events)
+    n = 0
+    with open(path, "w") as f:
+        f.write(json.dumps({"type": "header", "version": 1,
+                            "clock_unit": "s"}) + "\n")
+        for ev in events:
+            kind = ev[0]
+            if kind == SPAN:
+                rec = {"type": "span", "name": ev[1], "track": list(ev[2]),
+                       "t": ev[3], "dur": ev[4], "args": ev[5]}
+            elif kind == INSTANT:
+                rec = {"type": "inst", "name": ev[1], "track": list(ev[2]),
+                       "t": ev[3], "args": ev[4]}
+            else:
+                rec = {"type": "ctr", "name": ev[1], "track": list(ev[2]),
+                       "t": ev[3], "value": ev[4]}
+            f.write(json.dumps(rec) + "\n")
+            n += 1
+        f.write(json.dumps({"type": "footer", "dropped": dropped,
+                            "metadata": metadata or {}}) + "\n")
+    return n
+
+
+def load_events(path: str) -> Tuple[List[tuple], dict]:
+    """Read either export form back into ``(events, metadata)`` where
+    ``events`` are the internal tuples (times in seconds)."""
+    with open(path) as f:
+        first = f.readline()
+        f.seek(0)
+        # both forms start with '{': JSONL's first line is a complete
+        # record with a "type" tag; a Chrome trace's first line is a
+        # fragment of (or the whole) top-level object
+        jsonl = False
+        try:
+            rec = json.loads(first)
+            jsonl = isinstance(rec, dict) and rec.get("type") in (
+                "header", "span", "inst", "ctr", "footer")
+        except ValueError:
+            pass
+        if not jsonl:
+            return _from_chrome(json.load(f))
+        events: List[tuple] = []
+        meta: dict = {}
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            t = rec.get("type")
+            if t == "span":
+                events.append((SPAN, rec["name"], tuple(rec["track"]),
+                               rec["t"], rec["dur"], rec.get("args")))
+            elif t == "inst":
+                events.append((INSTANT, rec["name"], tuple(rec["track"]),
+                               rec["t"], rec.get("args")))
+            elif t == "ctr":
+                events.append((COUNTER, rec["name"], tuple(rec["track"]),
+                               rec["t"], rec["value"]))
+            elif t == "footer":
+                meta = rec.get("metadata", {})
+                meta["dropped_events"] = rec.get("dropped", 0)
+        return events, meta
+
+
+def _from_chrome(obj: dict) -> Tuple[List[tuple], dict]:
+    names: Dict[int, str] = {}
+    for ev in obj.get("traceEvents", ()):
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            names[ev["pid"]] = ev["args"]["name"]
+    label_to_group = {v: k for k, v in _GROUP_LABEL.items()}
+    events: List[tuple] = []
+    for ev in obj.get("traceEvents", ()):
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        label = names.get(ev.get("pid"), "engine")
+        group = label_to_group.get(label, label)
+        track = (group, int(ev.get("tid", 0)))
+        if ph == "X":
+            events.append((SPAN, ev["name"], track, ev["ts"] / 1e6,
+                           ev.get("dur", 0.0) / 1e6, ev.get("args") or None))
+        elif ph == "i":
+            events.append((INSTANT, ev["name"], track, ev["ts"] / 1e6,
+                           ev.get("args") or None))
+        elif ph == "C":
+            value = next(iter(ev.get("args", {"v": 0.0}).values()))
+            events.append((COUNTER, ev["name"], track, ev["ts"] / 1e6,
+                           value))
+    return events, dict(obj.get("otherData", {}))
+
+
+# -- validation (the obs-smoke gate) -----------------------------------------
+
+
+def validate_chrome_trace(obj: Any) -> List[str]:
+    """Structural problems with a Chrome-trace dict (empty list = valid,
+    Perfetto-loadable).  Also exercises a JSON round-trip, so a
+    non-serializable args value is caught here, not in the browser."""
+    problems: List[str] = []
+    try:
+        obj = json.loads(json.dumps(obj))
+    except (TypeError, ValueError) as e:
+        return [f"not JSON-serializable: {e}"]
+    if not isinstance(obj, dict):
+        return ["top level is not an object"]
+    evs = obj.get("traceEvents")
+    if not isinstance(evs, list):
+        return ["traceEvents missing or not a list"]
+    if not evs:
+        problems.append("traceEvents is empty")
+    for i, ev in enumerate(evs):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i} is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "C", "M", "B", "E"):
+            problems.append(f"event {i} has unknown ph {ph!r}")
+            continue
+        if "name" not in ev or "pid" not in ev:
+            problems.append(f"event {i} ({ph}) missing name/pid")
+        if ph in ("X", "i", "C"):
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)):
+                problems.append(f"event {i} ({ph}) has non-numeric ts")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"event {i} (X) has bad dur {dur!r}")
+    return problems
+
+
+def request_chains(tracer_or_events) -> Dict[int, dict]:
+    """Per-request lifecycle view: ``rid -> {"spans": {name: [durs]},
+    "instants": [names in time order], "finish": reason or None,
+    "n_tokens": int}``."""
+    events, _ = _events_of(tracer_or_events)
+    chains: Dict[int, dict] = {}
+
+    def chain(rid: int) -> dict:
+        c = chains.get(rid)
+        if c is None:
+            c = chains[rid] = {"spans": defaultdict(list), "instants": [],
+                               "finish": None, "n_tokens": 0}
+        return c
+
+    insts: Dict[int, List[tuple]] = defaultdict(list)
+    for ev in events:
+        kind, name, track = ev[0], ev[1], ev[2]
+        if track[0] != "req":
+            continue
+        rid = int(track[1])
+        c = chain(rid)
+        if kind == SPAN:
+            c["spans"][name].append(ev[4])
+        elif kind == INSTANT:
+            insts[rid].append((ev[3], name))
+            if name == "finish":
+                args = ev[4] or {}
+                c["finish"] = args.get("reason")
+                c["n_tokens"] = args.get("n_tokens", 0)
+    for rid, ts_names in insts.items():
+        chains[rid]["instants"] = [n for _, n in sorted(
+            ts_names, key=lambda p: p[0])]
+    for c in chains.values():
+        c["spans"] = dict(c["spans"])
+    return chains
+
+
+def validate_chains(tracer_or_events,
+                    expect: Optional[Dict[int, str]] = None) -> List[str]:
+    """Span-chain problems (empty list = every request's chain closed).
+
+    Contract per request track:
+
+    * a ``submitted`` instant and exactly one ``finish`` instant whose
+      ``reason`` matches ``expect[rid]`` when given;
+    * reasons that generated tokens (``length``/``stop``) additionally
+      require a ``prefill`` span, a ``first_token`` instant, and — when
+      more than one token was emitted — a closed ``decode`` span;
+    * no negative span durations anywhere on the track.
+
+    When given a live :class:`Tracer`, also checks no interval is still
+    open (a begun-but-never-ended span is a leak the exporter would
+    silently drop).
+    """
+    problems: List[str] = []
+    if isinstance(tracer_or_events, Tracer):
+        for (track, name), t0 in tracer_or_events.open_spans().items():
+            problems.append(f"span {name!r} on {track} never closed "
+                            f"(begun at {t0:.6f})")
+    chains = request_chains(tracer_or_events)
+    if expect:
+        for rid in expect:
+            if rid not in chains:
+                problems.append(f"rid {rid}: no events at all")
+    for rid, c in sorted(chains.items()):
+        finishes = c["instants"].count("finish")
+        if finishes != 1:
+            problems.append(f"rid {rid}: {finishes} finish events "
+                            f"(want exactly 1)")
+            continue
+        if "submitted" not in c["instants"]:
+            problems.append(f"rid {rid}: no submitted event")
+        if c["instants"][-1] != "finish":
+            problems.append(f"rid {rid}: events after finish: "
+                            f"{c['instants']}")
+        reason = c["finish"]
+        if expect is not None and rid in expect and reason != expect[rid]:
+            problems.append(f"rid {rid}: finish reason {reason!r} != "
+                            f"expected {expect[rid]!r}")
+        for name, durs in c["spans"].items():
+            for d in durs:
+                if d < 0:
+                    problems.append(f"rid {rid}: span {name!r} has "
+                                    f"negative duration {d}")
+        if reason in _GENERATED_REASONS:
+            if "prefill" not in c["spans"]:
+                problems.append(f"rid {rid}: finished {reason!r} without "
+                                f"a prefill span")
+            if "first_token" not in c["instants"]:
+                problems.append(f"rid {rid}: finished {reason!r} without "
+                                f"a first_token event")
+            if c["n_tokens"] > 1 and "decode" not in c["spans"]:
+                problems.append(f"rid {rid}: {c['n_tokens']} tokens but "
+                                f"no decode span")
+    return problems

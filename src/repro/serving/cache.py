@@ -67,6 +67,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.formats import kv_cast
 from repro.models import api
+from repro.obs.trace import POOL_TRACK
 from repro.runtime import sharding as shr
 
 try:  # pragma: no cover - import surface only
@@ -388,7 +389,7 @@ class SlotCachePool:
 
     def __init__(self, cfg: ArchConfig, n_slots: int, s_max: int, dtype,
                  mesh: Optional[Any] = None, shardings: Optional[Any] = None,
-                 kv_dtype=None):
+                 kv_dtype=None, tracer: Optional[Any] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         assert s_max <= cfg.max_seq, (s_max, cfg.max_seq)
@@ -397,6 +398,7 @@ class SlotCachePool:
         self.s_max = s_max
         self.mesh = mesh
         self.kv_dtype = kv_dtype
+        self.tracer = tracer
         self.cache = remap_kv_leaves(
             api.make_cache(cfg, n_slots, s_max, dtype), kv_dtype)
         if mesh is None:
@@ -502,7 +504,7 @@ class PagedCachePool:
                  *, page_size: int = 16, n_pages: int = 0,
                  share: str = "exact",
                  mesh: Optional[Any] = None, shardings: Optional[Any] = None,
-                 kv_dtype=None):
+                 kv_dtype=None, tracer: Optional[Any] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if page_size < 1:
@@ -526,6 +528,7 @@ class PagedCachePool:
                 f"request ({self.pages_per_slot} pages) + the trash page")
         self.share = share
         self.kv_dtype = kv_dtype
+        self.tracer = tracer
         self.cache = make_paged_cache(cfg, n_slots, self.n_pages, page_size,
                                       dtype, kv_dtype=kv_dtype)
         if mesh is None:
@@ -554,6 +557,10 @@ class PagedCachePool:
         self._seized: List[int] = []  # chaos harness: seize_pages()
 
     # -- geometry / accounting --
+
+    def _trace(self, name: str, **args: Any) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(name, POOL_TRACK, **args)
 
     @property
     def free_slots(self) -> int:
@@ -611,6 +618,7 @@ class PagedCachePool:
     def _drop_entry(self, key: bytes) -> None:
         e = self._index.pop(key)
         self.evictions += 1
+        self._trace("prefix_evict", pages=len(e.pages()))
         for pid in e.pages():
             self.ref[pid] -= 1
             if self.ref[pid] == 0:
@@ -660,6 +668,8 @@ class PagedCachePool:
             self.ref[pid] += 1
             taken.append(pid)
         self._seized.extend(taken)
+        self._trace("seize_pages", n=len(taken),
+                    free=len(self._free_pages))
         return taken
 
     def release_pages(self, pids: Optional[List[int]] = None) -> None:
@@ -673,6 +683,8 @@ class PagedCachePool:
             self.ref[pid] -= 1
             if self.ref[pid] == 0:
                 self._free_pages.append(pid)
+        self._trace("release_pages", n=len(give),
+                    free=len(self._free_pages))
 
     # -- admission --
 
@@ -731,6 +743,8 @@ class PagedCachePool:
                                             jnp.int32(e.tail_page),
                                             jnp.int32(dst))
                     self.cow_copies += 1
+                    self._trace("cow_copy", src=int(e.tail_page),
+                                dst=int(dst))
                     self.ref[dst] += 1
                     row.append(dst)
                 else:

@@ -124,6 +124,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.kernels.tuning import dispatch as _dispatch
 from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.obs.metrics import summarize as _summarize
+from repro.obs.trace import ENGINE_TRACK
 from repro.layers.quant import quantize_params
 from repro.models import api
 from repro.runtime import sharding as shr
@@ -176,6 +178,8 @@ class EngineConfig:
     retry_backoff_s: float = 0.01
     preempt_after_ticks: int = 3  # paged: stalled-head ticks before preempt
     injector: Optional[Any] = None  # ServeFaultInjector (eq=False: hashable)
+    # -- observability (repro.obs; README "Observability") --
+    tracer: Optional[Any] = None  # obs.Tracer: request-lifecycle tracing
 
 
 @dataclasses.dataclass
@@ -192,6 +196,10 @@ class ServeMetrics:
     n_slots: int = 0
     makespan_s: float = 0.0   # first admission -> last completion
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # raw latency samples (seconds); to_dict summarizes them into the
+    # "ttft"/"itl" p50/p95/p99 blocks (repro.obs.metrics.summarize)
+    ttft_samples: List[float] = dataclasses.field(default_factory=list)
+    itl_samples: List[float] = dataclasses.field(default_factory=list)
     prefix_hits: int = 0        # admissions served (fully or partly) shared
     prefix_hit_tokens: int = 0  # prompt tokens covered by shared pages
     pool: dict = dataclasses.field(default_factory=dict)  # pool.stats()
@@ -202,6 +210,13 @@ class ServeMetrics:
     preempted: int = 0     # paged preempt-youngest events
     retried: int = 0       # submit retries + tick retries consumed
     kernel_fallbacks: int = 0  # pallas->jnp downgrades during this run
+    # per-kernel attribution: which kernel downgraded (not just how many
+    # times in total), plus the dispatch-layer resolve / autotune-cache
+    # hit/miss deltas for the run (kernels/tuning/dispatch.py)
+    kernel_fallbacks_by_kernel: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    dispatch: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -224,13 +239,46 @@ class ServeMetrics:
             return 0.0
         return self.occupancy_ticks / (self.decode_ticks * self.n_slots)
 
+    @property
+    def ttft_summary(self) -> dict:
+        """TTFT distribution: count/mean/min/max/p50/p95/p99 seconds."""
+        return _summarize(self.ttft_samples)
+
+    @property
+    def itl_summary(self) -> dict:
+        """Inter-token latency distribution (time between consecutive
+        tokens of one request, decode ticks only), seconds."""
+        return _summarize(self.itl_samples)
+
+    # derived keys to_dict adds on top of the dataclass fields; from_dict
+    # strips exactly these, so the pair stays a lossless round trip
+    _DERIVED = ("decode_tok_per_s", "aggregate_tok_per_s", "occupancy",
+                "ttft", "itl")
+
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["decode_tok_per_s"] = self.decode_tok_per_s
         d["aggregate_tok_per_s"] = self.aggregate_tok_per_s
         d["occupancy"] = self.occupancy
         d["ttft_s"] = {str(k): v for k, v in self.ttft_s.items()}
+        d["ttft"] = self.ttft_summary
+        d["itl"] = self.itl_summary
         return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeMetrics":
+        """Inverse of :meth:`to_dict` (derived summary keys dropped,
+        ``ttft_s`` rid keys back to int) — the JSON round trip tests
+        and offline tooling rebuild metrics through this."""
+        d = dict(d)
+        for k in cls._DERIVED:
+            d.pop(k, None)
+        d["ttft_s"] = {int(k): v for k, v in d.get("ttft_s", {}).items()}
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(f"unknown ServeMetrics keys: {sorted(unknown)}")
+        return cls(**d)
 
 
 class Engine:
@@ -311,11 +359,12 @@ class Engine:
                 jnp.dtype(self.cfg.dtype), page_size=self.ecfg.page_size,
                 n_pages=self._n_pages, share=self.ecfg.prefix,
                 mesh=self.mesh, shardings=self._cache_sh,
-                kv_dtype=self._kv_dtype)
+                kv_dtype=self._kv_dtype, tracer=self.ecfg.tracer)
         return SlotCachePool(self.cfg, self.ecfg.n_slots, self.s_max,
                              jnp.dtype(self.cfg.dtype), mesh=self.mesh,
                              shardings=self._cache_sh,
-                             kv_dtype=self._kv_dtype)
+                             kv_dtype=self._kv_dtype,
+                             tracer=self.ecfg.tracer)
 
     def _effective_k(self, req: Request) -> int:
         return req.sampling.top_k or self.ecfg.top_k
@@ -454,6 +503,8 @@ class Engine:
         req = st.request
         sp = req.sampling
         stochastic = sp.stochastic
+        tr = self.ecfg.tracer
+        tc0 = clock() if tr is not None else 0.0
         replay = len(st.tokens) > 0
         if replay:
             prompt = (np.concatenate([req.prompt,
@@ -486,6 +537,12 @@ class Engine:
             st.status = FINISHED
             st.t_finish = clock()
             metrics.failed += 1
+            if tr is not None:
+                tr.span("prefill", ("req", req.rid), tc0,
+                        hit=bool(hit and hit.skip_prefill), replay=replay,
+                        poisoned=True)
+                tr.instant("quarantine", ("req", req.rid), where="prefill")
+                self._trace_finish(st)
             return False
         if not replay:
             first = self._first_fn(stochastic, self._effective_k(req))(
@@ -500,11 +557,20 @@ class Engine:
         jax.block_until_ready(pool.cache)
         metrics.prefill_time_s += time.perf_counter() - t0
         st.status = RUNNING
+        if tr is not None:
+            tr.span("prefill", ("req", req.rid), tc0,
+                    hit=bool(hit and hit.skip_prefill), replay=replay,
+                    prompt_len=eff.prompt_len, slot=st.slot)
         if not replay:
             st.tokens.append(token)
             st.t_first_token = clock()
+            st.t_last_token = st.t_first_token
             metrics.first_tokens += 1
             metrics.ttft_s[req.rid] = st.ttft
+            metrics.ttft_samples.append(st.ttft)
+            if tr is not None:
+                tr.instant("first_token", ("req", req.rid),
+                           t=st.t_first_token)
         return True
 
     def _finish(self, st: RequestState, pool: CachePool, clock) -> None:
@@ -512,6 +578,21 @@ class Engine:
         st.status = FINISHED
         pool.free(st.slot)
         st.slot = -1
+        self._trace_finish(st)
+
+    def _trace_finish(self, st: RequestState) -> None:
+        """Close whichever lifecycle spans are open on the request's
+        track and stamp the terminal ``finish`` instant (every finish
+        path funnels through here, so the span-chain validator can
+        require exactly one per request)."""
+        tr = self.ecfg.tracer
+        if tr is None:
+            return
+        track = ("req", st.request.rid)
+        tr.end("queued", track)
+        tr.end("decode", track)
+        tr.instant("finish", track, t=st.t_finish,
+                   reason=st.finish_reason, n_tokens=len(st.tokens))
 
     # -- the serve loop ------------------------------------------------------
 
@@ -543,10 +624,20 @@ class Engine:
         pool = self._make_pool()
         max_top_k = max((self._effective_k(r) for r in requests), default=0)
         metrics = ServeMetrics(n_requests=len(requests), n_slots=n)
-        fb_start = _dispatch.fallback_total()
+        fb_start = _dispatch.fallback_stats()
+        disp_start = _dispatch.dispatch_snapshot()
         t_start = time.perf_counter()
         skew = [0.0]  # injected clock-skew accumulator (list: closure write)
         clock = lambda: time.perf_counter() - t_start + skew[0]  # noqa: E731
+        tr = self.ecfg.tracer
+        if tr is not None:
+            # trace timestamps ride the engine clock, skew included, so
+            # the exported timeline moves with injected clock faults the
+            # same way deadlines do
+            tr.bind_clock(clock)
+            tr.instant("run_start", ENGINE_TRACK, scheduler=scheduler,
+                       n_slots=n, pool=self.ecfg.pool,
+                       n_requests=len(requests))
 
         states: List[RequestState] = [
             RequestState(r, t_arrive=r.arrival_time,
@@ -555,6 +646,10 @@ class Engine:
                                       if r.sampling.deadline_ms is not None
                                       else float("inf")))
             for r in sorted(requests, key=lambda r: (r.arrival_time, r.rid))]
+        if tr is not None:
+            for st in states:
+                tr.instant("submitted", ("req", st.request.rid),
+                           t=st.t_arrive)
         # deques: the admission loop pops from the head every tick, and a
         # list.pop(0) there is O(n) — quadratic over a long Poisson trace
         pending: Deque[RequestState] = deque(states)
@@ -587,14 +682,21 @@ class Engine:
                         metrics.retried += 1
                         st.t_arrive = now + self.ecfg.retry_backoff_s
                         requeue.append(st)
+                        if tr is not None:
+                            tr.instant("retry_backoff",
+                                       ("req", st.request.rid),
+                                       attempt=st.retries)
                     else:
                         st.status = FINISHED
                         st.reason = FINISH_REJECTED
                         st.t_finish = clock()
                         metrics.failed += 1
+                        self._trace_finish(st)
                     continue
                 st.status = QUEUED
                 ready.append(st)
+                if tr is not None:
+                    tr.begin("queued", ("req", st.request.rid))
             if requeue:
                 merged = sorted(list(pending) + requeue,
                                 key=lambda s: (s.t_arrive, s.request.rid))
@@ -612,6 +714,7 @@ class Engine:
                     s.reason = reason
                     s.t_finish = clock()
                     hits += 1
+                    self._trace_finish(s)
             store.clear()
             store.extend(keep)
             return hits
@@ -621,6 +724,8 @@ class Engine:
             st = active.pop(slot)
             if reason is not None:
                 st.reason = reason
+            if tr is not None:
+                tr.end("resident", ("slot", slot))
             self._finish(st, pool, clock)
             clear(slot)
             return st
@@ -647,6 +752,8 @@ class Engine:
                     metrics.timed_out += 1
 
         def start(st: RequestState):
+            if tr is not None:
+                tr.end("queued", ("req", st.request.rid))
             if not self._do_prefill(st, pool, metrics, clock):
                 return  # failed at prefill (numeric guard); slot released
             st.admit_seq = admit_seq[0]
@@ -654,6 +761,10 @@ class Engine:
             if st.done:  # max_new_tokens == 1: no decode steps at all
                 self._finish(st, pool, clock)
                 return
+            if tr is not None:
+                tr.begin("decode", ("req", st.request.rid))
+                tr.begin("resident", ("slot", st.slot),
+                         rid=st.request.rid)
             active[st.slot] = st
             cur[st.slot] = st.cur_index
             last_tok[st.slot] = st.tokens[-1]
@@ -680,6 +791,12 @@ class Engine:
             st.slot = -1
             st.status = QUEUED
             metrics.preempted += 1
+            if tr is not None:
+                track = ("req", st.request.rid)
+                tr.end("decode", track)
+                tr.end("resident", ("slot", slot))
+                tr.instant("preempt", track, slot=slot)
+                tr.begin("queued", track)
             ready.insert(min(1, len(ready)), st)
 
         while pending or ready or active:
@@ -727,6 +844,9 @@ class Engine:
                     # nothing running, nothing arriving, nothing admitted
                     # this pass, head-of-line refused: the pool can never
                     # satisfy it
+                    if tr is not None:
+                        tr.instant("admission_error", ENGINE_TRACK,
+                                   rid=ready[0].request.rid)
                     raise AdmissionError(
                         ready[0].request.rid, pool.stats(),
                         queued=[s.request.rid for s in ready],
@@ -745,6 +865,9 @@ class Engine:
                     if rid in by_rid:
                         poison_slot_cache(pool, by_rid[rid])
                         poison_queue.discard(rid)
+                        if tr is not None:
+                            tr.instant("poison", ("slot", by_rid[rid]),
+                                       rid=rid)
 
             stochastic = bool(np.any(temps[list(active)] > 0))
             tick = self._tick_fn(stochastic, max_top_k, guard)
@@ -752,6 +875,7 @@ class Engine:
                         jnp.asarray(temps), jnp.asarray(topks),
                         jnp.asarray(rids), self._key)
             attempts = 0
+            t_tick0 = clock() if tr is not None else 0.0
             t0 = time.perf_counter()
             while True:
                 try:
@@ -774,6 +898,9 @@ class Engine:
                         raise
                     attempts += 1
                     metrics.retried += 1
+                    if tr is not None:
+                        tr.instant("tick_retry", ENGINE_TRACK,
+                                   tick=tick_no, attempt=attempts)
                     time.sleep(self.ecfg.retry_backoff_s)
             nxt = np.asarray(jax.block_until_ready(out))
             # guarded ticks encode a tripped slot as sentinel token -1
@@ -781,6 +908,12 @@ class Engine:
             metrics.decode_time_s += time.perf_counter() - t0
             metrics.decode_ticks += 1
             metrics.occupancy_ticks += len(active)
+            if tr is not None:
+                t_now = clock()
+                tr.span("tick", ENGINE_TRACK, t_tick0, t_now,
+                        n_active=len(active))
+                tr.counter("active_slots", len(active), t=t_now)
+                tr.counter("ready_queue", len(ready), t=t_now)
 
             if valid is not None:
                 # quarantine: fail poisoned slots NOW — their garbage
@@ -788,6 +921,10 @@ class Engine:
                 # recycled) cache rows free this tick
                 for slot in list(active):
                     if not valid[slot]:
+                        if tr is not None:
+                            tr.instant("quarantine",
+                                       ("req", active[slot].request.rid),
+                                       slot=slot, where="decode")
                         evict(slot, FINISH_NUMERIC)
                         metrics.failed += 1
             metrics.decode_tokens += len(active)
@@ -796,6 +933,8 @@ class Engine:
             for slot in list(active):
                 st = active[slot]
                 st.tokens.append(int(nxt[slot]))
+                metrics.itl_samples.append(now - st.t_last_token)
+                st.t_last_token = now
                 if st.done:
                     # Under 'static' the freed slot stays unused (and its
                     # lane keeps burning in every tick) until the whole
@@ -809,8 +948,17 @@ class Engine:
                     last_tok[slot] = st.tokens[-1]
 
         self._cancel_rids.clear()
-        metrics.kernel_fallbacks = _dispatch.fallback_total() - fb_start
+        fb_by_kernel = {
+            k: v - fb_start.get(k, 0)
+            for k, v in _dispatch.fallback_stats().items()
+            if v - fb_start.get(k, 0)}
+        metrics.kernel_fallbacks_by_kernel = fb_by_kernel
+        metrics.kernel_fallbacks = sum(fb_by_kernel.values())
+        metrics.dispatch = _dispatch.dispatch_delta(disp_start)
         metrics.makespan_s = clock()
+        if tr is not None:
+            tr.instant("run_end", ENGINE_TRACK,
+                       decode_ticks=metrics.decode_ticks)
         stats = pool.stats()
         metrics.pool = stats
         metrics.prefix_hits = stats.get("prefix_hits", 0)
@@ -896,10 +1044,15 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
     from repro.serving.requests import (FINISH_DEADLINE, FINISH_LENGTH,
                                         FINISH_STOP)
 
+    # real prefill -> first-token latency (was hardcoded 0.0, which made
+    # sequential-vs-engine TTFT incomparable); stays 0.0 only when the
+    # request expired before its first token existed
+    ttft = [0.0]
+
     def result(out, reason):
         return GenerationResult(
             rid=request.rid, prompt_len=request.prompt_len,
-            tokens=np.asarray(out, np.int32), ttft_s=0.0,
+            tokens=np.asarray(out, np.int32), ttft_s=ttft[0],
             finish_s=time.perf_counter() - t0, finish_reason=reason)
 
     if time.perf_counter() > deadline:
@@ -909,6 +1062,7 @@ def generate_sequential(cfg: ArchConfig, params, request: Request, *,
     out = [int(sample_tokens(logits[:, -1, :], policy=policy, top_k=k,
                              temperature=temp,
                              key=tok_key(request.prompt_len))[0])]
+    ttft[0] = time.perf_counter() - t0
     stopped = out[-1] == sp.stop
     for i in range(request.max_new_tokens - 1):
         if stopped:

@@ -135,6 +135,7 @@ class RequestState:
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_arrive: float = 0.0       # engine-clock seconds
     t_first_token: float = 0.0
+    t_last_token: float = 0.0   # last token emission (ITL sampling)
     t_finish: float = 0.0
     reason: Optional[str] = None
     retries: int = 0            # submit-side retries consumed so far

@@ -115,6 +115,10 @@ def poison_slot_cache(pool, slot: int) -> None:
         # tick's pinned in_shardings see the cache where they expect it
         cache = jax.device_put(cache, pool.shardings)
     pool.cache = cache
+    tracer = getattr(pool, "tracer", None)
+    if tracer is not None:
+        tracer.instant("cache_poisoned", ("slot", slot),
+                       paged=paged, page=int(pid) if paged else -1)
 
 
 __all__ = ["AdmissionError", "poison_slot_cache"]
