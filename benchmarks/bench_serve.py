@@ -38,6 +38,12 @@ single-request runs.  Writes ``BENCH_serve.json``:
   the gate asserts the prompt was prefilled exactly once (7 exact
   prefix hits skip prefill entirely) and that every sharer's tokens
   still match the unshared sequential reference
+* ``paged_append`` — prompt-only page reservation vs the worst-case
+  budget on an early-stop trace: written/reserved page utilization
+  (gated >= 0.9), strictly higher peak concurrent admissions on the
+  same arena with identical tokens, and the chunked-prefill resume
+  sub-leg (a pages-mode partial hit re-prefills <= 0.5x the cold
+  prompt compute, bit-exactly)
 * ``quant`` — the trace served again under ``ArchConfig.quant="int8"``
   through BOTH pools (weight-only int8 params, int8 KV arenas,
   fixed-point GS epilogues): metrics per pool, int8-vs-fp32 param bytes,
@@ -60,7 +66,8 @@ single-request runs.  Writes ``BENCH_serve.json``:
 * ``checks``      — the CI gate: parity vs sequential (slot AND paged),
   continuous ticks not above static ticks (with slack), continuous
   occupancy not below static (with slack), the paged byte budget,
-  prefill-once prefix sharing, the quant-leg byte/divergence/parity
+  prefill-once prefix sharing, the paged-append utilization/
+  concurrency/resume gates, the quant-leg byte/divergence/parity
   gates, and the resilience overhead budget
 
 Ticks are the robust comparison: every decode tick costs one full-pool
@@ -87,7 +94,7 @@ TICK_SLACK = 1.25       # wall-clock admission jitter allowance
 QUANT_BYTES_BUDGET = 0.55       # int8 params+cache vs the analytic bf16 pair
 QUANT_DIVERGENCE_BUDGET = 0.25  # int8-vs-fp32 greedy token drift allowance
 RESILIENCE_OVERHEAD_BUDGET = 1.05  # numeric-guard tick cost vs guard-off
-RESILIENCE_REPEATS = 4             # min-of-N pooled tick costs (CPU noise)
+RESILIENCE_REPEATS = 8             # min-of-N pooled tick costs (CPU noise)
 OBS_OVERHEAD_BUDGET = 1.05  # tracing-on tick cost vs tracing-off
 OBS_REPEATS = 6             # min-of-N pooled tick costs (CPU noise; the
                             # true delta is a few host-side appends, so
@@ -201,6 +208,77 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
         np.array_equal(prefix_ref, prefix_outs[r.rid].tokens)
         for r in shared_reqs)
 
+    # paged-append leg: prompt-only page reservation (decode-time
+    # appends).  Three gates:
+    #   * utilization — on a trace whose requests stop far short of
+    #     their generation budget, cumulative written/reserved pages
+    #     >= 0.9 (worst-case reservation strands the unwritten budget)
+    #   * concurrency — the same trace on the same arena admits strictly
+    #     more requests at once than the worst-case baseline
+    #     (peak_active), with identical tokens
+    #   * resume — a pages-mode partial prefix hit re-prefills at most
+    #     half of what a cold prefill of the same prompt computes, and
+    #     the resumed tokens are bit-identical to the cold run's
+    #     (chunked prefill's fixed per-chunk schedule)
+    pages_per_slot = -(-engine.s_max // page_size)
+    ap_prompts = [rng.randint(0, cfg.vocab, (page_size,)) for _ in range(2)]
+    ap_frames = [(rng.randn(cfg.enc_seq, cfg.d_model).astype(np.float32)
+                  * 0.1 if cfg.family == "encdec" else None)
+                 for _ in range(2)]
+    ap_gen = engine.s_max - page_size + 1  # worst case = pages_per_slot
+    ap_stops = [int(np.asarray(generate_sequential(
+        cfg, params, Request(rid=9, prompt=p, max_new_tokens=ap_gen,
+                             frames=f), s_max=engine.s_max))[2])
+        for p, f in zip(ap_prompts, ap_frames)]
+
+    def ap_trace():
+        from repro.serving import SamplingParams
+
+        return [Request(rid=i, prompt=p, max_new_tokens=ap_gen, frames=f,
+                        sampling=SamplingParams(stop=ap_stops[i]))
+                for i, (p, f) in enumerate(zip(ap_prompts, ap_frames))]
+
+    # arena fits ONE worst-case reservation at a time, but both
+    # prompt-footprint reservations (plus their few appends) together
+    ap_ecfg = dict(n_slots=2, s_max=engine.s_max, pool="paged",
+                   page_size=page_size, n_pages=pages_per_slot + 2,
+                   prefix="off", max_prefill_per_tick=2)
+    ap_outs, ap_m = Engine(cfg, params,
+                           EngineConfig(**ap_ecfg), mesh=mesh).run(ap_trace())
+    apw_outs, apw_m = Engine(
+        cfg, params, EngineConfig(page_reserve="worst", **ap_ecfg),
+        mesh=mesh).run(ap_trace())
+    ap_parity_ok = all(
+        np.array_equal(ap_outs[i].tokens, apw_outs[i].tokens)
+        and ap_outs[i].finish_reason == "stop" for i in range(2))
+    ap_util = (ap_m.pool["written_pages"]
+               / max(ap_m.pool["reserved_pages"], 1))
+
+    # resume sub-leg: two prompts sharing a 2-page head; each request
+    # cold (fresh pool per run) then both together on one pool
+    rs_head = rng.randint(0, cfg.vocab, (2 * page_size,))
+    rs_frames = (rng.randn(cfg.enc_seq, cfg.d_model).astype(np.float32)
+                 * 0.1 if cfg.family == "encdec" else None)
+    rs_reqs = [Request(rid=i, prompt=np.concatenate(
+                   [rs_head, rng.randint(0, cfg.vocab, (page_size - 1,))]),
+                   max_new_tokens=4, frames=rs_frames) for i in range(2)]
+    rs_engine = Engine(cfg, params,
+                       EngineConfig(n_slots=2, s_max=engine.s_max,
+                                    pool="paged", page_size=page_size,
+                                    prefix="pages"), mesh=mesh)
+    rs_cold = []
+    for r in rs_reqs:
+        cold_outs, cold_m = rs_engine.run([r])  # fresh pool per run
+        rs_cold.append((cold_outs, cold_m))
+    rs_cold_tokens = rs_cold[0][1].prefill_tokens
+    rs_outs, rs_m = rs_engine.run(rs_reqs)
+    rs_sharer_tokens = rs_m.prefill_tokens - rs_cold_tokens
+    rs_parity_ok = all(
+        np.array_equal(rs_cold[i][0][r.rid].tokens, rs_outs[r.rid].tokens)
+        for i, r in enumerate(rs_reqs))
+    rs_resume_ok = (rs_m.pool["resume_hits"] == 1
+                    and rs_sharer_tokens <= 0.5 * rs_cold_tokens)
+
     # quant leg: the same trace under ArchConfig.quant="int8" — weight-only
     # int8 params (transient in-step dequant), static-scale int8 KV arenas,
     # fixed-point GS epilogues.  Two gates:
@@ -225,11 +303,13 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
             # quantization-exact in int8: the replayed prefill attends
             # over exact f32 K/V where the original decode read the
             # int8-roundtripped cache.  The pool-parity gate here is
-            # exact, so this leg waits out head-of-line stalls instead
-            # of preempting (the seed behavior of the tight arena).
+            # exact, so this leg throttles at admission (worst-case
+            # reservation + no stalled-head preemption) instead of
+            # admitting on the prompt footprint and preempting when a
+            # decode-time append finds the tight arena full.
             ("paged", EngineConfig(n_slots=n_slots, s_max=engine.s_max,
                                    pool="paged", page_size=page_size,
-                                   n_pages=n_pages,
+                                   n_pages=n_pages, page_reserve="worst",
                                    preempt_after_ticks=10**9))):
         q_engine = Engine(cfg_q, params, ecfg, mesh=mesh)
         q_engine.warmup(sorted({r.prompt_len for r in reqs}))
@@ -343,6 +423,11 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
         "prefix_prefill_once": (prefix_m.prefill_skips == 7
                                 and prefix_m.prefill_tokens == shared_len
                                 and prefix_m.prefix_hits >= 7),
+        "paged_append_util_ok": ap_util >= 0.9,
+        "paged_append_concurrency_ok": ap_m.peak_active > apw_m.peak_active,
+        "paged_append_parity_ok": ap_parity_ok,
+        "prefix_resume_compute_ok": rs_resume_ok,
+        "prefix_resume_parity_ok": rs_parity_ok,
         "quant_bytes_ok": quant_bytes_ratio <= QUANT_BYTES_BUDGET,
         "quant_divergence_ok": (quant_matched_frac
                                 >= 1.0 - QUANT_DIVERGENCE_BUDGET),
@@ -371,6 +456,22 @@ def serve_records(smoke: bool = True, arch: str = "tinyllama-1.1b",
         "page_size": page_size,
         "n_pages": n_pages,
         "paged_bytes_ratio": paged_bytes_ratio,
+        "paged_append": {
+            "append": ap_m.to_dict(),
+            "worst": apw_m.to_dict(),
+            "utilization": ap_util,
+            "worst_utilization": (apw_m.pool["written_pages"]
+                                  / max(apw_m.pool["reserved_pages"], 1)),
+            "peak_active_append": ap_m.peak_active,
+            "peak_active_worst": apw_m.peak_active,
+            "resume": {
+                "cold_prefill_tokens": rs_cold_tokens,
+                "sharer_prefill_tokens": rs_sharer_tokens,
+                "compute_ratio": rs_sharer_tokens / max(rs_cold_tokens, 1),
+                "resume_hits": rs_m.pool["resume_hits"],
+                "resume_tokens": rs_m.pool["resume_tokens"],
+            },
+        },
         "quant": {
             "slot": q_slot_m.to_dict(),
             "paged": q_paged_m.to_dict(),

@@ -101,6 +101,15 @@ def main() -> None:
               f"{px['prefill_skips']} prefills skipped, "
               f"{px['prefix_hit_tokens']} prompt tokens shared, "
               f"prefill_tokens {px['prefill_tokens']}\"")
+        pa = rec["paged_append"]
+        print(f"serve_paged_append,0,\"written/reserved "
+              f"x{pa['utilization']:.2f} (worst "
+              f"x{pa['worst_utilization']:.2f}), peak_active "
+              f"{pa['peak_active_append']} vs {pa['peak_active_worst']} "
+              f"worst-case, resume prefill "
+              f"{pa['resume']['sharer_prefill_tokens']}/"
+              f"{pa['resume']['cold_prefill_tokens']} tokens "
+              f"(x{pa['resume']['compute_ratio']:.2f})\"")
         qt = rec["quant"]
         qm = qt["slot"]
         print(f"serve_quant,{qm['decode_time_s'] * 1e6 / max(qm['decode_ticks'], 1):.1f},"

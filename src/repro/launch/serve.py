@@ -24,7 +24,10 @@ length), grafted into the cache pool, and decoded by one fused jitted
 tick over the whole pool with per-slot sequence positions — greedy or
 temperature/top-k sampling through the Goldschmidt softmax runs inside
 the jit.  ``--pool paged`` swaps the per-slot rows for the block-table
-page arena (serving/cache.py) and prints its page/prefix stats;
+page arena (serving/cache.py) and prints its page/prefix stats —
+admission reserves only the prompt's pages and appends pages as decode
+crosses page boundaries (``--page-reserve worst`` restores the legacy
+whole-budget reservation);
 ``--scheduler static`` degrades to the lockstep baseline for
 comparison; ``benchmarks/bench_serve.py`` automates the comparisons
 into ``BENCH_serve.json``.
@@ -119,6 +122,12 @@ def report(outs, metrics, scheduler: str) -> None:
               f"{metrics.prefill_skips} prefills skipped), "
               f"cow copies {pool['cow_copies']}, "
               f"cache bytes {pool['cache_bytes']}")
+        print(f"  reservation ({pool['reserve']}): "
+              f"{pool['written_pages']}/{pool['reserved_pages']} "
+              f"reserved pages written, "
+              f"{pool['appended_pages']} appended mid-decode, "
+              f"resume hits {pool['resume_hits']} "
+              f"({pool['resume_tokens']} prompt tokens resumed)")
     fails = dict(failed=metrics.failed, cancelled=metrics.cancelled,
                  timed_out=metrics.timed_out, preempted=metrics.preempted,
                  retried=metrics.retried,
@@ -175,6 +184,13 @@ def main() -> None:
     ap.add_argument("--pages", type=int, default=0,
                     help="--pool paged: arena pages (0 = worst case; "
                          "size it down to actually save memory)")
+    ap.add_argument("--page-reserve", choices=("prompt", "worst"),
+                    default="prompt",
+                    help="--pool paged admission footprint: 'prompt' "
+                         "reserves only the prompt's pages and appends "
+                         "pages as decode crosses page boundaries; "
+                         "'worst' keeps the legacy whole-budget "
+                         "reservation (prompt+gen) at admission")
     ap.add_argument("--quant", choices=("none", "int8"), default="none",
                     help="int8: quantize weights per-tensor and the KV "
                          "arena on the static KV scale; division sites "
@@ -245,6 +261,7 @@ def main() -> None:
     engine = Engine(cfg, params, EngineConfig(
         n_slots=args.batch, s_max=s_max, seed=args.seed, pool=args.pool,
         page_size=args.page_size, n_pages=args.pages,
+        page_reserve=args.page_reserve,
         max_retries=args.max_retries, tracer=tracer),
         mesh=mesh)
     reqs = build_requests(args, cfg, rng)

@@ -79,6 +79,31 @@ def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
     return prefill_step
 
 
+def make_chunk_init_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                         dp: Tuple[str, ...] = ()) -> Callable:
+    """Zero-token chunked-prefill carry (encdec: runs the encoder once)."""
+    def chunk_init_step(params, batch):
+        with shr.activation_context(mesh, dp):
+            return api.chunk_init(cfg, maybe_dequantize(params), batch, 1,
+                                  jnp.dtype(cfg.dtype))
+
+    return chunk_init_step
+
+
+def make_chunk_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                            dp: Tuple[str, ...] = ()) -> Callable:
+    """One prompt chunk against the growing carry.  ``start`` is a traced
+    int32 scalar — carry shapes already force one compile per prefix
+    length, so tracing it adds no recompiles.  The carry must NOT be
+    donated: prefix-page boundary captures alias earlier carries."""
+    def chunk_prefill_step(params, states, batch, start):
+        with shr.activation_context(mesh, dp):
+            return api.prefill_chunk(cfg, maybe_dequantize(params), states,
+                                     batch, start)
+
+    return chunk_prefill_step
+
+
 def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
                      dp: Tuple[str, ...] = (),
                      page_size: int = 0) -> Callable:

@@ -287,6 +287,28 @@ def attention_dense(
     return o.astype(q.dtype)
 
 
+def chunk_attention(
+    q, k_all, v_all, *, policy: NumericsPolicy,
+    sm_scale: Optional[float] = None,
+):
+    """Chunked-prefill attention: ``sq`` new query rows against the full
+    KV prefix so far.
+
+    ``k_all``/``v_all`` (b, base+sq, KH, hd) hold every position up to
+    the end of this chunk; the queries are the last ``sq`` of them.  The
+    causal rule is ``col <= base + iq``, which is exactly
+    :func:`attention_dense`'s ``tril(..., k=sk-sq)`` mask — so this is a
+    thin delegate.  What it buys: one compiled artifact (and one
+    arithmetic schedule) per (prefix length, chunk length) pair,
+    independent of the *total* prompt length — the property that makes a
+    prefill resumed from a shared page boundary bit-exact against a cold
+    chunked prefill of the same prompt (serving/cache.py, prefix
+    sharing).
+    """
+    return attention_dense(q, k_all, v_all, policy=policy, causal=True,
+                           sm_scale=sm_scale)
+
+
 # ---------------------------------------------------------------------------
 # decode (one token against a cache)
 # ---------------------------------------------------------------------------

@@ -58,6 +58,25 @@ def decode_step(cfg: ArchConfig, params, states, cur_index, batch,
                                    page_size=page_size)
 
 
+def chunk_init(cfg: ArchConfig, params, batch: Dict[str, Any], b: int, dtype):
+    """Zero-token carry for a chunked prefill.  For encdec this runs the
+    encoder once (cross-KV is chunk-invariant); decoder-only needs no
+    params or batch — just zero-length KV / zeroed SSM leaves."""
+    if is_encdec(cfg):
+        return encdec.chunk_init(cfg, params, batch["frames"], dtype)
+    return transformer.chunk_init(cfg, b, dtype)
+
+
+def prefill_chunk(cfg: ArchConfig, params, states, batch, start):
+    """One prompt chunk at absolute positions ``start .. start+s`` against
+    the carry from earlier chunks; returns (last-position logits, carry)."""
+    if is_encdec(cfg):
+        return encdec.prefill_chunk(cfg, params, states, batch["tokens"],
+                                    start)
+    return transformer.prefill_chunk(cfg, params, states, batch["tokens"],
+                                     start, batch.get("pos_ids"))
+
+
 def make_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
     if is_encdec(cfg):
         return encdec.make_cache(cfg, batch, s_max, dtype)

@@ -2,10 +2,14 @@
 
 ``kind = (mixer, ffn)`` with mixer in {attn, mamba} and ffn in
 {mlp, moe, none}; the per-arch pattern comes from ``ArchConfig.block_kinds``.
-All blocks run in one of three modes:
+All blocks run in one of four modes:
 
   train   — full sequence, no state I/O
   prefill — full sequence, emits decode state (KV cache / SSM state)
+  chunk   — one prompt chunk, consumes + emits a growing prefill carry
+            (KV concatenated, SSM states threaded) — the chunked-prefill
+            path whose arithmetic schedule is independent of the total
+            prompt length (serving prefix-sharing resume)
   decode  — one token, consumes + emits state
 
 The state pytree leaves carry NO group axis here; the model stacks them.
@@ -86,7 +90,8 @@ def block_apply(
     policy = cfg.policy()
     # full sequence parallelism: seq dim of the residual stream (and of
     # q/k/v) sharded over 'model'; otherwise heads carry the TP axis.
-    sp = cfg.seq_parallel and mode != "decode"
+    # chunk mode runs page-sized batch-1 slices — too short to shard.
+    sp = cfg.seq_parallel and mode not in ("decode", "chunk")
     s_ax = "model" if sp else None
     h_ax = None if sp else "model"
     h = norm_apply(cfg.norm, params["norm1"], x, eps=cfg.norm_eps, policy=policy,
@@ -142,6 +147,16 @@ def block_apply(
                 o = attn.decode_attention(q, kc, vc, cur_index,
                                           policy=policy)
                 new_state = {"k": kc, "v": vc}
+        elif mode == "chunk":
+            # chunked prefill: the carry holds the KV of every earlier
+            # chunk; append this chunk's and attend the new rows against
+            # the whole prefix (attention.chunk_attention — one schedule
+            # per (prefix, chunk) pair, total-length independent)
+            assert state is not None
+            k_all = jnp.concatenate([state["k"], k], axis=1)
+            v_all = jnp.concatenate([state["v"], v], axis=1)
+            o = attn.chunk_attention(q, k_all, v_all, policy=policy)
+            new_state = {"k": k_all, "v": v_all}
         else:
             o = attn.flash(
                 q, k, v, policy=policy, causal=True,
@@ -169,6 +184,18 @@ def block_apply(
             out, (conv_s, ssm_s) = mb.mamba_apply(
                 params["mamba"], h, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
                 dt_rank=cfg.dt_rank_, chunk=cfg.mamba_chunk, return_state=True,
+            )
+            new_state = {"conv": conv_s, "ssm": ssm_s}
+        elif mode == "chunk":
+            # the SSM recurrence resumes exactly from the carried states;
+            # the inner scan chunk is a divisor of the (fixed) chunk
+            # length, so the schedule is total-length independent too
+            assert state is not None
+            out, (conv_s, ssm_s) = mb.mamba_apply(
+                params["mamba"], h, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+                dt_rank=cfg.dt_rank_, chunk=cfg.mamba_chunk,
+                conv_state=state["conv"], ssm_state=state["ssm"],
+                return_state=True,
             )
             new_state = {"conv": conv_s, "ssm": ssm_s}
         else:

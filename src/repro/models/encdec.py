@@ -109,7 +109,8 @@ def _dec_stack(cfg: ArchConfig, params: Params, x, enc_out, *, mode: str,
                states=None, cur_index=None, page_table=None,
                page_size: int = 0):
     policy = cfg.policy()
-    has_state = mode in ("prefill", "decode")
+    has_state = mode in ("prefill", "decode", "chunk")
+    consumes_state = mode in ("decode", "chunk")
 
     def body(x, group):
         lp, st = group
@@ -133,6 +134,15 @@ def _dec_stack(cfg: ArchConfig, params: Params, x, enc_out, *, mode: str,
                 o = attn.decode_attention(q, kc, vc, cur_index, policy=policy)
             new_st = {"k": kc, "v": vc, "ck": st["ck"], "cv": st["cv"]}
             ck, cv = st["ck"], st["cv"]
+        elif mode == "chunk":
+            # chunked prefill: append this chunk's self-KV to the carry
+            # and attend the new rows against the whole prefix; cross-KV
+            # was computed once by chunk_init and rides the carry
+            k_all = jnp.concatenate([st["k"], k], axis=1)
+            v_all = jnp.concatenate([st["v"], v], axis=1)
+            o = attn.chunk_attention(q, k_all, v_all, policy=policy)
+            new_st = {"k": k_all, "v": v_all, "ck": st["ck"], "cv": st["cv"]}
+            ck, cv = st["ck"], st["cv"]
         else:
             o = attn.flash_chunked(q, k, v, policy=policy, causal=True,
                                    q_block=cfg.attn_q_block,
@@ -143,14 +153,14 @@ def _dec_stack(cfg: ArchConfig, params: Params, x, enc_out, *, mode: str,
         x = x + attn.out_proj(lp["self_attn"], o)
         h = norm_apply(cfg.norm, lp["norm2"], x, eps=cfg.norm_eps, policy=policy)
         cq = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(h.dtype))
-        if mode != "decode":
+        if not consumes_state:
             ck = jnp.einsum("bsd,dhk->bshk", enc_out,
                             lp["cross_attn"]["wk"].astype(h.dtype))
             cv = jnp.einsum("bsd,dhk->bshk", enc_out,
                             lp["cross_attn"]["wv"].astype(h.dtype))
             if mode == "prefill":
                 new_st["ck"], new_st["cv"] = ck, cv
-        if mode == "decode":
+        if consumes_state:
             o = attn.attention_dense(cq, ck, cv, policy=policy, causal=False)
         else:
             o = attn.flash_chunked(cq, ck, cv, policy=policy, causal=False,
@@ -162,7 +172,7 @@ def _dec_stack(cfg: ArchConfig, params: Params, x, enc_out, *, mode: str,
         x = x + mlp_mod.mlp_apply(lp["mlp"], h, act=cfg.act)
         return x, new_st
 
-    xs = (params["dec_layers"], states if mode == "decode" else None)
+    xs = (params["dec_layers"], states if consumes_state else None)
     fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
     x, new_states = jax.lax.scan(fn, x, xs)
     return x, (new_states if has_state else None)
@@ -208,6 +218,31 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
     x = _embed_dec(cfg, params, tokens)
     x, states = _dec_stack(cfg, params, x, enc_out, mode="prefill")
     return _unembed(cfg, params, x[:, -1:, :]), states, jnp.int32(tokens.shape[1])
+
+
+def chunk_init(cfg: ArchConfig, params: Params, frames: jnp.ndarray, dtype):
+    """Zero-token carry for chunked decoder prefill: run the encoder once
+    and stack every layer's cross-KV up front (numerically the same
+    per-layer einsum ``_dec_stack`` computes in-scan, batched over the
+    layer axis); self-KV starts zero-length."""
+    enc_out = encode(cfg, params, frames)
+    wk = params["dec_layers"]["cross_attn"]["wk"]
+    wv = params["dec_layers"]["cross_attn"]["wv"]
+    ck = jnp.einsum("bsd,ldhk->lbshk", enc_out, wk.astype(enc_out.dtype))
+    cv = jnp.einsum("bsd,ldhk->lbshk", enc_out, wv.astype(enc_out.dtype))
+    kv = jnp.zeros((cfg.n_layers, frames.shape[0], 0, cfg.n_kv_heads,
+                    cfg.head_dim_), dtype)
+    return {"k": kv, "v": kv, "ck": ck, "cv": cv}
+
+
+def prefill_chunk(cfg: ArchConfig, params: Params, states, tokens: jnp.ndarray,
+                  start: jnp.ndarray):
+    """One chunk of a chunked decoder prefill at absolute positions
+    ``start .. start+s`` — returns (last-position logits, grown carry)."""
+    x = _embed_dec(cfg, params, tokens, cur_index=start)
+    x, new_states = _dec_stack(cfg, params, x, None, mode="chunk",
+                               states=states)
+    return _unembed(cfg, params, x[:, -1:, :]), new_states
 
 
 def decode_step(cfg: ArchConfig, params: Params, states, cur_index, token,

@@ -108,14 +108,15 @@ def _stack(cfg: ArchConfig, params: Params, x: jnp.ndarray, *, mode: str,
            page_size: int = 0):
     """Scan the layer stack.  Returns (x, new_states or None)."""
     kinds = cfg.block_kinds()
-    has_state = mode in ("prefill", "decode")
+    has_state = mode in ("prefill", "decode", "chunk")
+    consumes_state = mode in ("decode", "chunk")
 
     def body(x, group):
         gparams, gstates = group
         new_gstates = {} if has_state else None
         for i, kind in enumerate(kinds):
-            st = gstates[f"pos{i}"] if (gstates is not None and has_state and
-                                        mode == "decode") else None
+            st = gstates[f"pos{i}"] if (gstates is not None
+                                        and consumes_state) else None
             x, ns = blocks.block_apply(
                 cfg, kind, gparams[f"pos{i}"], x, mode=mode, rope_cs=rope_cs,
                 state=st, cur_index=cur_index, page_table=page_table,
@@ -125,7 +126,7 @@ def _stack(cfg: ArchConfig, params: Params, x: jnp.ndarray, *, mode: str,
                 new_gstates[f"pos{i}"] = ns
         return x, new_gstates
 
-    xs = (params["layers"], states if mode == "decode" else None)
+    xs = (params["layers"], states if consumes_state else None)
     if cfg.scan_layers:
         fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
         x, new_states = jax.lax.scan(fn, x, xs)
@@ -199,6 +200,43 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
     x, states = _stack(cfg, params, x, mode="prefill", rope_cs=rope_cs)
     logits = unembed(cfg, params, x[:, -1:, :])
     return logits, states, jnp.int32(s)
+
+
+def chunk_init(cfg: ArchConfig, batch: int, dtype) -> Dict[str, Any]:
+    """Zero-token carry for chunked prefill: zero-length KV leaves plus
+    zeroed SSM states — exactly ``make_cache`` at ``s_max=0``."""
+    return make_cache(cfg, batch, 0, dtype)
+
+
+def prefill_chunk(cfg: ArchConfig, params: Params, states, tokens: jnp.ndarray,
+                  start: jnp.ndarray, pos_ids: Optional[jnp.ndarray] = None):
+    """One chunk of a chunked prefill: tokens (b, s) at absolute positions
+    ``start .. start+s``, against the carry from the previous chunks.
+
+    Returns (last-position logits (b, 1, V), grown carry).  The carry is
+    ``chunk_init`` for the first chunk, or a resumed state rebuilt from
+    shared prefix pages (serving/cache.py ``resume_state``).  Positions
+    are built directly from ``start`` (a traced scalar) — ``_rope_info``'s
+    scalar-cur path broadcasts ONE position over the sequence, which is
+    decode semantics, not chunk semantics.
+    """
+    b, s = tokens.shape
+    if cfg.pos == "rope":
+        positions = start + jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (b, s))
+        rope_cs = rope_cos_sin(positions, cfg.head_dim_, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        assert pos_ids is not None, "mrope chunk needs pos_ids (3, b, s)"
+        rope_cs = mrope_cos_sin(pos_ids, cfg.head_dim_, cfg.rope_theta,
+                                cfg.mrope_sections)
+    else:
+        rope_cs = None
+    x = embed_tokens(cfg, params, tokens,
+                     cur_index=start if cfg.pos == "learned" else None)
+    x, new_states = _stack(cfg, params, x, mode="chunk", rope_cs=rope_cs,
+                           states=states)
+    logits = unembed(cfg, params, x[:, -1:, :])
+    return logits, new_states
 
 
 def decode_step(cfg: ArchConfig, params: Params, states, cur_index: jnp.ndarray,

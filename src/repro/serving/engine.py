@@ -26,11 +26,18 @@ The pool is chosen by ``EngineConfig.pool``:
 
 * ``"slot"`` — per-slot max-length rows (:class:`SlotCachePool`).
 * ``"paged"`` — the block-table page arena (:class:`PagedCachePool`):
-  admission reserves ``ceil((prompt+gen)/page_size)`` pages instead of a
-  max-length row, the fused tick reads/writes KV through a
+  admission reserves only the **prompt footprint**
+  (``ceil(prompt/page_size)`` pages; ``page_reserve='worst'`` restores
+  the old prompt+gen-1 budget) and the run loop appends pages as each
+  slot's ``cur`` crosses a page boundary, so early-stopped requests
+  never strand reservation; mid-decode arena exhaustion routes through
+  the same preempt-youngest / AdmissionError machinery as refused
+  admission.  The fused tick reads/writes KV through a
   ``(n_slots, pages_per_slot)`` block-table operand, and hash-keyed
   prefix sharing lets identical prompts prefill once and decode off
-  shared pages.  A freed slot's table row points at the reserved trash
+  shared pages; with ``prefix='pages'`` prefill runs in page-size
+  chunks and partial hits resume from the deepest shared boundary
+  bit-exactly.  A freed slot's table row points at the reserved trash
   page, so the stale writes the tick issues for inactive slots are
   harmless.  Greedy fp32 output is token-for-token identical to the
   slot pool (tests/test_serving.py::TestPagedServing).
@@ -111,6 +118,7 @@ table):
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from collections import deque
@@ -123,7 +131,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.kernels.tuning import dispatch as _dispatch
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.steps import (make_chunk_init_step, make_chunk_prefill_step,
+                                make_decode_step, make_prefill_step)
 from repro.obs.metrics import summarize as _summarize
 from repro.obs.trace import ENGINE_TRACK
 from repro.layers.quant import quantize_params
@@ -131,7 +140,8 @@ from repro.models import api
 from repro.runtime import sharding as shr
 from repro.runtime.failures import TickFailure
 from repro.serving.cache import (CachePool, PagedCachePool, SlotCachePool,
-                                 make_paged_cache, remap_kv_leaves)
+                                 _strip_paged, make_paged_cache,
+                                 remap_kv_leaves)
 from repro.serving.requests import (FINISH_CANCELLED, FINISH_DEADLINE,
                                     FINISH_NUMERIC, FINISH_REJECTED,
                                     FINISHED, QUEUED, RUNNING,
@@ -171,6 +181,7 @@ class EngineConfig:
     page_size: int = 16     # paged: tokens per arena page
     n_pages: int = 0        # paged: arena size; 0 -> worst case + trash
     prefix: str = "exact"   # paged: prefix sharing — exact | pages | off
+    page_reserve: str = "prompt"  # paged: prompt | worst admission budget
     # -- fault tolerance (module docstring, "Fault tolerance") --
     numeric_guard: bool = True  # per-slot NaN/Inf quarantine in the tick
     max_queue: int = 0          # bounded admission queue; 0 = unbounded
@@ -193,6 +204,7 @@ class ServeMetrics:
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
     occupancy_ticks: int = 0  # sum over ticks of active slots
+    peak_active: int = 0      # max concurrently active slots in any tick
     n_slots: int = 0
     makespan_s: float = 0.0   # first admission -> last completion
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
@@ -295,6 +307,9 @@ class Engine:
         self.ecfg = engine_cfg or EngineConfig()
         if self.ecfg.pool not in POOLS:
             raise ValueError(f"pool must be one of {POOLS}")
+        if self.ecfg.page_reserve not in ("prompt", "worst"):
+            raise ValueError("page_reserve must be prompt|worst, got "
+                             f"{self.ecfg.page_reserve}")
         self.s_max = self.ecfg.s_max or cfg.max_seq
         self.mesh = mesh
         self._policy = cfg.policy()
@@ -334,6 +349,16 @@ class Engine:
             self._cache_sh = shr.pool_shardings(
                 mesh, cfg, cache_specs, self.ecfg.n_slots)
         self._prefill = jax.jit(make_prefill_step(cfg, mesh=mesh, dp=()))
+        # chunked prefill: only the pages-sharing paged engine runs it —
+        # its fixed page-size chunk schedule is what makes partial-hit
+        # resume bit-exact (cold and resumed prefills share every
+        # compiled (prefix, chunk) artifact); exact/off keep the one-shot
+        # flash prefill whose output matches the sequential reference
+        self._chunked = self._paged and self.ecfg.prefix == "pages"
+        self._chunk_init = jax.jit(make_chunk_init_step(cfg, mesh=mesh,
+                                                        dp=()))
+        self._chunk_prefill = jax.jit(
+            make_chunk_prefill_step(cfg, mesh=mesh, dp=()))
         self._decode = make_decode_step(
             cfg, mesh=mesh, dp=self._dp,
             page_size=self.ecfg.page_size if self._paged else 0)
@@ -358,6 +383,7 @@ class Engine:
                 self.cfg, self.ecfg.n_slots, self.s_max,
                 jnp.dtype(self.cfg.dtype), page_size=self.ecfg.page_size,
                 n_pages=self._n_pages, share=self.ecfg.prefix,
+                reserve=self.ecfg.page_reserve,
                 mesh=self.mesh, shardings=self._cache_sh,
                 kv_dtype=self._kv_dtype, tracer=self.ecfg.tracer)
         return SlotCachePool(self.cfg, self.ecfg.n_slots, self.s_max,
@@ -486,6 +512,72 @@ class Engine:
         if self.cfg.family == "encdec" and req.frames is None:
             raise ValueError(f"request {req.rid}: encdec needs frames")
 
+    def _run_chunked_prefill(self, pool: CachePool, eff: Request,
+                             hit, metrics: ServeMetrics):
+        """Prefill ``eff`` in page-size chunks, resuming from the deepest
+        shared-page boundary when the admission's PrefixHit carries one.
+
+        Returns (last-position logits, final carry, boundaries) where
+        ``boundaries`` maps prompt page index -> (logits, stripped
+        carry) snapshots taken as each full page completes — the pool
+        publishes them with the page entries so later partial hits can
+        resume here.  The chunk schedule depends only on (start, chunk
+        length), never on the total prompt, so a resumed prefill reuses
+        the cold run's compiled artifacts and is bit-exact against it.
+        """
+        ps = self.ecfg.page_size
+        plen = eff.prompt_len
+        tr = self.ecfg.tracer
+        resume = hit is not None and hit.resume is not None
+        if resume:
+            start = hit.resume_tokens
+            logits = hit.resume.logits
+            states = pool.resume_state(hit)
+            if tr is not None:
+                tr.instant("prefix_resume", ("req", eff.rid), tokens=start)
+        else:
+            start = 0
+            logits = None
+            states = self._chunk_init(self.params,
+                                      prefill_batch(self.cfg, eff))
+        boundaries: Dict[int, tuple] = {}
+        pos = start
+        while pos < plen:
+            end = min(pos + ps, plen)
+            chunk = {"tokens": jnp.asarray(eff.prompt[None, pos:end],
+                                           jnp.int32)}
+            if self.cfg.pos == "mrope":
+                chunk["pos_ids"] = jnp.broadcast_to(
+                    jnp.arange(pos, end, dtype=jnp.int32), (3, 1, end - pos))
+            logits, states = self._chunk_prefill(self.params, states, chunk,
+                                                 jnp.int32(pos))
+            if end % ps == 0:
+                # stripped: the snapshot keeps only the non-paged leaves
+                # (conv/ssm/cross-KV) — the KV prefix itself lives in the
+                # shared pages and is re-gathered at resume
+                boundaries[end // ps - 1] = (logits, _strip_paged(states))
+            pos = end
+        metrics.prefill_tokens += plen - start
+        return logits, states, boundaries
+
+    def _effective_request(self, st: RequestState) -> Request:
+        """The request as it would prefill right now: a preemption replay
+        folds its recorded tokens (all but the held last one) into the
+        prompt.  Admission gates on this, not the original request —
+        under prompt-only page reservation a replay's footprint grows
+        with its recorded tokens, so gating on the original prompt would
+        admit a replay the alloc cannot satisfy."""
+        req = st.request
+        if not st.tokens:
+            return req
+        prompt = (np.concatenate([req.prompt,
+                                  np.asarray(st.tokens[:-1], np.int32)])
+                  if len(st.tokens) > 1 else req.prompt)
+        return Request(rid=req.rid, prompt=prompt,
+                       max_new_tokens=(req.max_new_tokens
+                                       - len(st.tokens) + 1),
+                       sampling=req.sampling, frames=req.frames)
+
     def _do_prefill(self, st: RequestState, pool: CachePool,
                     metrics: ServeMetrics, clock) -> bool:
         """Admit ``st`` into a slot.  Returns False when the request was
@@ -494,9 +586,9 @@ class Engine:
 
         A state that carries tokens is a **preemption replay**: its
         prompt + all-but-the-last recorded token re-prefill as one
-        prompt (same page budget — prompt+gen-1 is invariant — and the
-        same ``cur_index``), the held last token re-enters decode, and
-        no first token is sampled.  The (rid, absolute position) PRNG
+        prompt (the worst-case footprint prompt+gen-1 is invariant, and
+        the same ``cur_index``), the held last token re-enters decode,
+        and no first token is sampled.  The (rid, absolute position) PRNG
         keying makes the remaining stochastic stream identical to the
         un-preempted run.
         """
@@ -506,24 +598,19 @@ class Engine:
         tr = self.ecfg.tracer
         tc0 = clock() if tr is not None else 0.0
         replay = len(st.tokens) > 0
-        if replay:
-            prompt = (np.concatenate([req.prompt,
-                                      np.asarray(st.tokens[:-1], np.int32)])
-                      if len(st.tokens) > 1 else req.prompt)
-            eff = Request(rid=req.rid, prompt=prompt,
-                          max_new_tokens=(req.max_new_tokens
-                                          - len(st.tokens) + 1),
-                          sampling=sp, frames=req.frames)
-        else:
-            eff = req
+        eff = self._effective_request(st)
         t0 = time.perf_counter()
         # alloc first: a paged pool resolves prefix hits here, and a
         # whole-prompt hit means the prefill never runs at all
         slot = pool.alloc(eff)
         hit = getattr(slot, "hit", None)
+        boundaries = None
         if hit is not None and hit.skip_prefill:
             logits, states = hit.entry.logits, None
             metrics.prefill_skips += 1
+        elif self._chunked:
+            logits, states, boundaries = self._run_chunked_prefill(
+                pool, eff, hit, metrics)
         else:
             logits, states, _ = self._prefill(self.params,
                                               prefill_batch(self.cfg, eff))
@@ -551,7 +638,8 @@ class Engine:
                 else self._key)
             token = int(jax.block_until_ready(first)[0])
         st.slot = int(slot)
-        pool.write(st.slot, states, req=eff, logits=logits)
+        pool.write(st.slot, states, req=eff, logits=logits,
+                   boundaries=boundaries)
         # settle the graft inside the prefill window so its async device
         # work isn't billed to the next decode tick's timing
         jax.block_until_ready(pool.cache)
@@ -697,11 +785,12 @@ class Engine:
                 ready.append(st)
                 if tr is not None:
                     tr.begin("queued", ("req", st.request.rid))
-            if requeue:
-                merged = sorted(list(pending) + requeue,
-                                key=lambda s: (s.t_arrive, s.request.rid))
-                pending.clear()
-                pending.extend(merged)
+            for s in requeue:
+                # bisect insertion keeps pending sorted by (t_arrive, rid)
+                # without re-sorting the whole deque per backoff requeue
+                # (quadratic over a churning trace)
+                bisect.insort(pending, s,
+                              key=lambda x: (x.t_arrive, x.request.rid))
 
         def fail_waiting(store: Deque[RequestState], reason: str,
                          match) -> int:
@@ -744,6 +833,11 @@ class Engine:
         def expire_deadlines():
             now = clock()
             expired = lambda s: now > s.deadline_at  # noqa: E731
+            # pending too: a backoff-requeued request sitting out its
+            # retry window past deadline_ms must finish with
+            # reason="deadline", not keep retrying toward "rejected"
+            metrics.timed_out += fail_waiting(pending, FINISH_DEADLINE,
+                                              expired)
             metrics.timed_out += fail_waiting(ready, FINISH_DEADLINE,
                                               expired)
             for slot, st in list(active.items()):
@@ -819,18 +913,20 @@ class Engine:
             if scheduler == "continuous":
                 budget = self.ecfg.max_prefill_per_tick
                 while (ready and budget > 0
-                       and pool.can_admit(ready[0].request)):
+                       and pool.can_admit(self._effective_request(ready[0]))):
                     start(ready.popleft())
                     budget -= 1
                     admitted += 1
             else:  # static lockstep: full group in, nothing until group out
                 if not active and ready:
-                    while ready and pool.can_admit(ready[0].request):
+                    while ready and pool.can_admit(
+                            self._effective_request(ready[0])):
                         start(ready.popleft())
                         admitted += 1
 
             head_stuck = (ready and not admitted
-                          and not pool.can_admit(ready[0].request))
+                          and not pool.can_admit(
+                              self._effective_request(ready[0])))
             stall = stall + 1 if (head_stuck and active
                                   and scheduler == "continuous") else 0
             if (self._paged and active
@@ -851,12 +947,40 @@ class Engine:
                         ready[0].request.rid, pool.stats(),
                         queued=[s.request.rid for s in ready],
                         pages_needed=(
-                            {s.request.rid: pool.pages_needed(s.request)
+                            {s.request.rid:
+                             pool.pages_needed(self._effective_request(s))
                              for s in ready} if self._paged else None))
                 if pending:  # idle until the next arrival
                     time.sleep(max(0.0, min(
                         pending[0].t_arrive - clock(), 0.005)))
                 continue
+
+            if self._paged:
+                # decode-time page appends (prompt-only reservation):
+                # back every active slot's write position before the
+                # tick, oldest admission first.  Arena exhaustion here
+                # routes through the existing preempt-youngest /
+                # AdmissionError machinery — not a new failure mode.
+                # A blocked slot is resolved IN PLACE (preempt until its
+                # append lands) rather than by restarting the pass: the
+                # freed pages would re-admit the preempted request first
+                # and the blocked slot would never reach the tick below
+                # (live-lock).
+                for slot in sorted(active,
+                                   key=lambda s: active[s].admit_seq):
+                    while (slot in active
+                           and not pool.ensure_page(slot, int(cur[slot]))):
+                        if len(active) > 1:
+                            preempt_youngest()  # may preempt `slot` itself
+                            continue
+                        st = active[slot]
+                        if tr is not None:
+                            tr.instant("admission_error", ENGINE_TRACK,
+                                       rid=st.request.rid)
+                        raise AdmissionError(
+                            st.request.rid, pool.stats(),
+                            queued=[s.request.rid for s in ready],
+                            pages_needed={st.request.rid: 1})
 
             if poison_queue:
                 by_rid = {st.request.rid: slot
@@ -908,6 +1032,7 @@ class Engine:
             metrics.decode_time_s += time.perf_counter() - t0
             metrics.decode_ticks += 1
             metrics.occupancy_ticks += len(active)
+            metrics.peak_active = max(metrics.peak_active, len(active))
             if tr is not None:
                 t_now = clock()
                 tr.span("tick", ENGINE_TRACK, t_tick0, t_now,

@@ -46,9 +46,11 @@ class SamplingParams:
     in the output; finish_reason becomes "stop").  ``deadline_ms``
     bounds the request's total latency, measured from its arrival on
     the engine clock: an expired request is failed with
-    finish_reason "deadline" whether it is still queued (zero tokens)
-    or mid-decode (partial tokens kept); ``generate_sequential``
-    honors the same semantics so finish reasons stay comparable.
+    finish_reason "deadline" wherever it sits — pending (including
+    backoff-requeued arrivals waiting out a retry window), queued with
+    zero tokens, or mid-decode (partial tokens kept);
+    ``generate_sequential`` honors the same semantics so finish
+    reasons stay comparable.
     """
 
     temperature: float = 0.0

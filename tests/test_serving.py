@@ -17,9 +17,9 @@ import pytest
 from repro import configs
 from repro.core.policy import EXACT, GS_FEEDBACK
 from repro.models import api
-from repro.serving import (Engine, EngineConfig, PagedCachePool, Request,
-                           SamplingParams, SlotCachePool,
-                           generate_sequential, sample_tokens)
+from repro.serving import (Engine, EngineConfig, FINISH_LENGTH, FINISH_STOP,
+                           PagedCachePool, Request, SamplingParams,
+                           SlotCachePool, generate_sequential, sample_tokens)
 
 F32 = dict(dtype="float32", param_dtype="float32")
 
@@ -218,6 +218,30 @@ class TestAdmissionLoop:
         assert len(outs) == 1000
         ref = outs[0].tokens
         for rid in (1, 499, 999):  # identical prompts -> identical tokens
+            np.testing.assert_array_equal(ref, outs[rid].tokens)
+
+    def test_1k_churn_with_backoff_requeues_serves_all(self):
+        """1k requests against a bounded queue + paged pool: overflow
+        requeues re-enter the pending deque in sorted order (bisect
+        insertion) and freed slots recycle through the free-slot deque.
+        Every request must finish exactly once with reason "length"."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(13))
+        rng = np.random.RandomState(13)
+        prompt = rng.randint(0, cfg.vocab, (4,))
+        reqs = [Request(rid=i, prompt=prompt, max_new_tokens=1)
+                for i in range(1000)]
+        eng = Engine(cfg, params, EngineConfig(
+            n_slots=4, s_max=8, pool="paged", page_size=4, prefix="off",
+            max_queue=900, max_retries=5000, retry_backoff_s=0.0))
+        outs, metrics = eng.run(reqs)
+        assert len(outs) == 1000 and metrics.n_requests == 1000
+        assert all(outs[i].finish_reason == FINISH_LENGTH
+                   for i in range(1000))
+        assert metrics.retried > 0    # overflow requeues really happened
+        assert metrics.pool["free_slots"] == 4
+        ref = outs[0].tokens
+        for rid in (1, 499, 999):
             np.testing.assert_array_equal(ref, outs[rid].tokens)
 
 
@@ -455,10 +479,12 @@ class TestPagedServing:
         assert metrics.prefill_skips == 0
         assert metrics.prefill_tokens == 4 * 6
 
-    def test_pages_mode_partial_prefix_same_length_parity(self):
-        """share='pages': page-aligned partial sharing between SAME
-        length prompts is bit-exact (chunked prefill partitions equal
-        lengths identically); the sharer must not rewrite shared pages."""
+    def test_pages_mode_partial_prefix_resumes_bit_exact(self):
+        """share='pages': a partial page-aligned hit attaches the shared
+        page chain and resumes chunked prefill from the deepest boundary
+        snapshot.  The per-chunk schedule is fixed (independent of total
+        prompt length), so a resumed prefill is bit-identical to a cold
+        one and the sharer skips the shared chunks' compute entirely."""
         cfg = configs.get_smoke("tinyllama-1.1b", **F32)
         params = api.init(cfg, jax.random.key(24))
         rng = np.random.RandomState(24)
@@ -466,11 +492,22 @@ class TestPagedServing:
         tails = [rng.randint(0, cfg.vocab, (3,)) for _ in range(2)]
         reqs = [Request(rid=i, prompt=np.concatenate([head, t]),
                         max_new_tokens=4) for i, t in enumerate(tails)]
-        eng = Engine(cfg, params, _paged_cfg(n_slots=2, prefix="pages"))
-        outs, metrics = eng.run(reqs)
-        _assert_parity(cfg, params, reqs, outs)
+        # cold reference: each request alone on a fresh pages-mode engine
+        cold = [Engine(cfg, params,
+                       _paged_cfg(n_slots=2, prefix="pages")).run([r])[r.rid]
+                for r in reqs]
+        outs, metrics = Engine(cfg, params,
+                               _paged_cfg(n_slots=2,
+                                          prefix="pages")).run(reqs)
+        for r, ref in zip(reqs, cold):
+            np.testing.assert_array_equal(ref.tokens, outs[r.rid].tokens)
+            assert outs[r.rid].finish_reason == ref.finish_reason
         assert metrics.prefix_hits == 1           # second shares 2 pages
         assert metrics.prefix_hit_tokens == 8
+        assert metrics.pool["resume_hits"] == 1
+        assert metrics.pool["resume_tokens"] == 8
+        # the sharer prefilled only its 3-token private tail
+        assert metrics.prefill_tokens == 11 + 3
 
     @pytest.mark.slow
     @pytest.mark.parametrize("arch,over", [
@@ -518,6 +555,49 @@ class TestPagedServing:
                 [Request(rid=0, prompt=np.zeros(10, np.int32),
                          max_new_tokens=9)])
 
+    def test_early_stop_strands_no_pages_and_boosts_concurrency(self):
+        """Regression for worst-case over-reservation: a request that
+        stops far short of its generation budget must only ever hold the
+        pages it wrote (cumulative reserved == written), and a trace the
+        worst-case budget forced to run one-at-a-time now runs
+        concurrently on the same arena."""
+        cfg = configs.get_smoke("tinyllama-1.1b", **F32)
+        params = api.init(cfg, jax.random.key(28))
+        rng = np.random.RandomState(28)
+        prompts = [rng.randint(0, cfg.vocab, (4,)) for _ in range(2)]
+        # each stream stops at its own 3rd greedy token: 3 of the 18
+        # budgeted tokens -> 2 of the 6 worst-case pages get written
+        stops = [int(np.asarray(generate_sequential(
+            cfg, params,
+            Request(rid=9, prompt=p, max_new_tokens=18), s_max=22))[2])
+            for p in prompts]
+
+        def trace():
+            return [Request(rid=i, prompt=p, max_new_tokens=18,
+                            sampling=SamplingParams(stop=stops[i]))
+                    for i, p in enumerate(prompts)]
+
+        # worst-case budget is 6 pages per request; the 7-usable-page
+        # arena fits one such reservation at a time
+        ecfg = dataclasses.replace(
+            _paged_cfg(n_slots=2, n_pages=8, prefix="off"),
+            max_prefill_per_tick=2)
+        outs_w, m_w = Engine(cfg, params, dataclasses.replace(
+            ecfg, page_reserve="worst")).run(trace())
+        outs, m = Engine(cfg, params, ecfg).run(trace())
+        for i in range(2):
+            assert outs[i].finish_reason == FINISH_STOP
+            np.testing.assert_array_equal(outs_w[i].tokens, outs[i].tokens)
+        # same arena, same trace: prompt-reservation overlaps the
+        # requests the whole-lifetime budget serialized
+        assert m_w.peak_active == 1
+        assert m.peak_active == 2
+        st = m.pool
+        assert st["reserved_pages"] == st["written_pages"]  # no stranding
+        assert st["pages_in_use"] == 0
+        st_w = m_w.pool
+        assert st_w["written_pages"] < st_w["reserved_pages"]  # the bug
+
 
 class TestPagedCachePool:
     """Host-side page accounting: refcounts, COW, eviction, trash page."""
@@ -539,14 +619,20 @@ class TestPagedCachePool:
         logits, states, _ = api.prefill(cfg, params, prefill_batch(cfg, req))
         pool.write(int(slot), states, req=req, logits=logits)
 
-    def test_alloc_reserves_whole_budget_and_free_returns_it(self):
+    def test_alloc_reserves_prompt_pages_and_appends_grow(self):
         cfg, pool = self._pool()
         req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
-                      max_new_tokens=6)  # 10 positions -> 3 pages
+                      max_new_tokens=6)  # prompt 5 -> 2 pages (worst: 3)
         before = pool.pages_in_use
         slot = pool.alloc(req)
-        assert pool.pages_in_use == before + 3
+        assert pool.pages_in_use == before + 2  # prompt footprint only
         assert all(pool.ref[p] == 1 for p in pool._slot_pages[int(slot)])
+        # decode growth: ensure_page appends exactly at page boundaries
+        assert pool.ensure_page(int(slot), 5)   # pos 5 fits reserved pages
+        assert pool.pages_in_use == before + 2
+        assert pool.ensure_page(int(slot), 8)   # pos 8 -> third page
+        assert pool.pages_in_use == before + 3
+        assert pool.appended_pages == 1
         self._write(cfg, pool, int(slot), req)
         pool.free(int(slot))
         # the prefix entry registered at write keeps the 2 prompt pages
@@ -554,6 +640,32 @@ class TestPagedCachePool:
         pool.clear_prefix()
         assert pool.pages_in_use == 0
         assert int(pool.ref.sum()) == 1  # only the pinned trash page
+
+    def test_worst_reserve_mode_keeps_legacy_budget(self):
+        cfg, pool = self._pool(reserve="worst")
+        req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                      max_new_tokens=6)  # 10 positions -> 3 pages up front
+        slot = pool.alloc(req)
+        assert pool.pages_in_use == 3
+        assert pool.stats()["reserve"] == "worst"
+        # growth within the reservation is a no-op
+        assert pool.ensure_page(int(slot), 9)
+        assert pool.appended_pages == 0
+
+    def test_append_page_fails_cleanly_when_arena_full(self):
+        cfg, pool = self._pool(n_slots=2, n_pages=5, share="off")
+        r0 = Request(rid=0, prompt=np.arange(9, dtype=np.int32),
+                     max_new_tokens=8)
+        s0 = pool.alloc(r0)  # 3 prompt pages, 1 free
+        r1 = Request(rid=1, prompt=np.arange(3, dtype=np.int32),
+                     max_new_tokens=8)
+        pool.alloc(r1)       # 1 prompt page, 0 free
+        # nothing evictable (share="off") -> append must refuse, not raise
+        assert pool.append_page(int(s0)) is False
+        assert pool.ensure_page(int(s0), 9) is True    # within reserved
+        assert pool.ensure_page(int(s0), 12) is False  # needs a 4th page
+        st = pool.stats()
+        assert st["reserved_pages"] == 4 and st["appended_pages"] == 0
 
     def test_trash_page_never_freed_and_freed_rows_point_at_it(self):
         cfg, pool = self._pool()
@@ -611,17 +723,17 @@ class TestPagedCachePool:
         assert pool.can_admit(big)
         s = pool.alloc(big)
         assert pool.evictions > 0
-        assert len(pool._slot_pages[int(s)]) == 4  # ceil(16/4)
+        assert len(pool._slot_pages[int(s)]) == 3  # ceil(12/4) prompt pages
 
     def test_can_admit_accounts_for_page_budget(self):
-        cfg, pool = self._pool(n_slots=2, n_pages=7, share="off")
+        cfg, pool = self._pool(n_slots=2, n_pages=5, share="off")
         r0 = Request(rid=0, prompt=np.arange(9, dtype=np.int32),
-                     max_new_tokens=8)   # 16 positions -> 4 pages
+                     max_new_tokens=8)   # 9-token prompt -> 3 pages
         assert pool.can_admit(r0)
         s0 = pool.alloc(r0)
         r1 = Request(rid=1, prompt=np.arange(9, dtype=np.int32),
                      max_new_tokens=8)
-        assert not pool.can_admit(r1)    # 4 more pages > 2 free
+        assert not pool.can_admit(r1)    # 3 more pages > 1 free
         self._write(cfg, pool, int(s0), r0)
         pool.free(int(s0))
         assert pool.can_admit(r1)

@@ -167,6 +167,40 @@ class TestDeadlines:
         assert m.timed_out == 1
         _slots_reclaimed(m)
 
+    def test_backoff_requeued_pending_expires_with_deadline(self, model):
+        """A request bounced back to pending by queue backpressure must
+        still expire with finish_reason="deadline" (not retry toward
+        "rejected"), and its trace chain must close with that reason."""
+        from repro.obs import Tracer
+        from repro.obs.export import request_chains, validate_chains
+
+        cfg, params = model
+        rng = np.random.RandomState(16)
+        r0 = Request(rid=0, prompt=rng.randint(0, cfg.vocab, (6,)),
+                     max_new_tokens=10)  # occupies the only slot
+        r1 = Request(rid=1, prompt=rng.randint(0, cfg.vocab, (5,)),
+                     max_new_tokens=4)   # fills the bounded queue
+        r2 = Request(rid=2, prompt=rng.randint(0, cfg.vocab, (4,)),
+                     max_new_tokens=4,
+                     sampling=SamplingParams(deadline_ms=5000.0))
+        tr = Tracer()
+        inj = ServeFaultInjector(skew={3: 100.0})
+        eng = Engine(cfg, params, EngineConfig(
+            n_slots=1, max_queue=1, max_retries=500,
+            retry_backoff_s=0.001, injector=inj, tracer=tr))
+        outs, m = eng.run([r0, r1, r2])
+        assert outs[2].finish_reason == FINISH_DEADLINE
+        assert len(outs[2].tokens) == 0
+        assert outs[0].finish_reason == FINISH_LENGTH
+        assert outs[1].finish_reason == FINISH_LENGTH
+        assert m.timed_out == 1 and m.retried > 0
+        expect = {r.rid: outs[r.rid].finish_reason for r in (r0, r1, r2)}
+        assert validate_chains(tr, expect) == []
+        # rid 2 was in the backoff cycle when it expired
+        insts = request_chains(tr)[2]["instants"]
+        assert "retry_backoff" in insts and insts[-1] == "finish"
+        _slots_reclaimed(m)
+
     def test_sequential_deadline_semantics_match(self, model):
         cfg, params = model
         rng = np.random.RandomState(5)
@@ -374,11 +408,14 @@ class TestAdmissionError:
             n_slots=2, s_max=16, pool="paged", page_size=4, n_pages=6,
             prefix="off", injector=inj))
         req = Request(rid=7, prompt=rng.randint(0, cfg.vocab, (4,)),
-                      max_new_tokens=9)  # needs 3 pages
+                      max_new_tokens=9)
         with pytest.raises(AdmissionError) as ei:
             eng.run([req])
         assert ei.value.rid == 7
-        assert ei.value.pages_needed == {7: 3}
+        # prompt-footprint admission succeeds on the one unseized page;
+        # the typed error now surfaces at the first decode-time append,
+        # still naming the request and the (1-page) shortfall
+        assert ei.value.pages_needed == {7: 1}
         assert ei.value.pool_stats["seized_pages"] == 4
 
     def test_squeeze_then_release_recovers(self, model):
